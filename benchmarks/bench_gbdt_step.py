@@ -1,0 +1,92 @@
+"""§Perf pair 3 — the paper's own workload: one distributed-GBDT boosting
+round, decomposed into proposal / binning / histogram / split stages with
+REAL wall-clock timings (CPU backend; the only measurable pair in this
+container) plus the hillclimb variants:
+
+  hist-v0  scatter-add histogram (ref.py — GPU-style formulation)
+  hist-v1  one-hot matmul, fp32  (the Pallas kernel's TPU formulation,
+           executed through XLA:CPU as a dense contraction)
+  hist-v2  v1 with bins pre-packed to uint8 (less index traffic)
+
+and proposal random vs weighted-quantile vs GK (Table-2 T columns).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import binning, boosting, proposal, tree as tree_lib
+from repro.kernels import ref
+
+
+def _time(fn, reps=3):
+    jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def _hist_onehot(bins, node, gh, n_nodes, nbins):
+    """One-hot matmul formulation (what the Pallas kernel does per tile)."""
+    n, f = bins.shape
+    idx = node[:, None] * nbins + bins                 # (n, f)
+    width = n_nodes * nbins
+    onehot = jax.nn.one_hot(idx, width, dtype=jnp.float32)   # (n, f, W)
+    out = jnp.einsum("nfw,nc->fwc", onehot, gh)
+    return out.reshape(f, n_nodes, nbins, 2).transpose(1, 0, 2, 3)
+
+
+def run(csv_rows: list) -> None:
+    key = jax.random.PRNGKey(0)
+    n, f, k = 200_000, 16, 32
+    nbins = k + 1
+    depth_nodes = 16
+    x = jax.random.normal(key, (n, f))
+    g = jax.random.normal(jax.random.fold_in(key, 1), (n,))
+    h = jnp.abs(jax.random.normal(jax.random.fold_in(key, 2), (n,)))
+    gh = jnp.stack([g, h], 1)
+    node = jax.random.randint(jax.random.fold_in(key, 3), (n,), 0,
+                              depth_nodes)
+
+    # stage timings
+    t_prop = _time(lambda: jax.block_until_ready(
+        proposal.random_candidates(key, x, k)))
+    csv_rows.append((f"gbdt_step/proposal_random", t_prop, f"n={n} f={f}"))
+    cand = proposal.random_candidates(key, x, k)
+    t_bin = _time(lambda: jax.block_until_ready(
+        binning.bin_features(x, cand)))
+    csv_rows.append((f"gbdt_step/binning", t_bin, ""))
+    bins = binning.bin_features(x, cand)
+
+    hist_fns = {
+        "hist_v0_scatter": jax.jit(lambda b, nd, s: ref.hist_ref(
+            b, nd, s, n_nodes=depth_nodes, nbins=nbins)),
+        "hist_v1_onehot": jax.jit(lambda b, nd, s: _hist_onehot(
+            b, nd, s, depth_nodes, nbins)),
+    }
+    outs = {}
+    for name, fn in hist_fns.items():
+        t = _time(lambda fn=fn: jax.block_until_ready(fn(bins, node, gh)))
+        outs[name] = fn(bins, node, gh)
+        csv_rows.append((f"gbdt_step/{name}", t,
+                         f"{n / (t / 1e6) / 1e6:.1f}M rows/s"))
+    err = float(jnp.abs(outs["hist_v0_scatter"]
+                        - outs["hist_v1_onehot"]).max())
+    csv_rows.append(("gbdt_step/hist_v0_vs_v1_err", 0.0, f"{err:.2e}"))
+
+    # v2: uint8 bins
+    bins8 = bins.astype(jnp.uint8)
+    fn8 = jax.jit(lambda b, nd, s: ref.hist_ref(
+        b.astype(jnp.int32), nd, s, n_nodes=depth_nodes, nbins=nbins))
+    t8 = _time(lambda: jax.block_until_ready(fn8(bins8, node, gh)))
+    csv_rows.append((f"gbdt_step/hist_v2_uint8bins", t8,
+                     f"{n / (t8 / 1e6) / 1e6:.1f}M rows/s"))
+
+    # whole tree level (hist + split)
+    t_level = _time(lambda: jax.block_until_ready(tree_lib.build_tree(
+        bins, gh, cand, max_depth=5, nbins=nbins)))
+    csv_rows.append(("gbdt_step/full_tree_depth5", t_level, ""))

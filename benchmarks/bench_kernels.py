@@ -1,0 +1,62 @@
+"""Kernel micro-benchmarks (ref backend timing on CPU + interpret-mode
+correctness deltas; real TPU timing is out of scope for this container)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, reps=5):
+    jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(csv_rows: list) -> None:
+    key = jax.random.PRNGKey(0)
+
+    # histogram: the GBDT hot spot
+    n, f, nbins, nn = 200_000, 16, 64, 32
+    bins = jax.random.randint(key, (n, f), 0, nbins)
+    node = jax.random.randint(key, (n,), 0, nn)
+    gh = jax.random.normal(key, (n, 2))
+    t = _time(lambda: ops.hist(bins, node, gh, n_nodes=nn, nbins=nbins,
+                               backend="ref"))
+    rows_per_s = n / (t / 1e6)
+    csv_rows.append((f"hist/n={n}xf={f}", t, f"{rows_per_s/1e6:.1f}M rows/s"))
+
+    # interpret-mode correctness vs ref (small shape)
+    b2 = bins[:2048]
+    n2 = node[:2048]
+    g2 = gh[:2048]
+    hp = ops.hist(b2, n2, g2, n_nodes=nn, nbins=nbins, backend="interpret")
+    hr = ref.hist_ref(b2, n2, g2, n_nodes=nn, nbins=nbins)
+    csv_rows.append(("hist/interpret_max_err", 0.0,
+                     f"{float(jnp.abs(hp - hr).max()):.2e}"))
+
+    # split gain
+    hist = jnp.abs(jax.random.normal(key, (64, 32, 65, 2)))
+    t = _time(lambda: ops.split_gain(hist, backend="ref"))
+    csv_rows.append(("split_gain/64x32x65", t, ""))
+
+    # flash attention (ref) prefill-ish tile
+    q = jax.random.normal(key, (1, 8, 1024, 128), jnp.bfloat16)
+    k = jax.random.normal(key, (1, 2, 1024, 128), jnp.bfloat16)
+    v = jax.random.normal(key, (1, 2, 1024, 128), jnp.bfloat16)
+    t = _time(lambda: ops.flash_attention(q, k, v, backend="ref"), reps=3)
+    flops = 4 * 1024 * 1024 * 128 * 8
+    csv_rows.append((f"flash_attention/1x8x1024x128", t,
+                     f"{flops / (t / 1e6) / 1e9:.1f} GFLOP/s(ref)"))
+    ap = ops.flash_attention(q[:, :, :256], k[:, :, :256], v[:, :, :256],
+                             backend="interpret")
+    ar = ref.attention_ref(q[:, :, :256], k[:, :, :256], v[:, :, :256])
+    csv_rows.append(("flash_attention/interpret_max_err", 0.0,
+                     f"{float(jnp.abs(ap.astype(jnp.float32) - ar.astype(jnp.float32)).max()):.2e}"))

@@ -1,0 +1,45 @@
+"""Proposal-stage timing: T(S) vs T(Q) scaling with rows (Table 2 T cols).
+
+Random sampling vs GK streaming summary vs vectorised weighted-quantile
+(sort-based) — the compute side of the paper's 2-6x speedup claim.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import proposal
+
+
+def _time(fn, reps=3):
+    fn()   # warmup / jit
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(csv_rows: list) -> None:
+    rng = np.random.default_rng(0)
+    key = jax.random.PRNGKey(0)
+    k = 32
+    for n in (10_000, 100_000, 500_000):
+        x = rng.normal(size=(n, 16)).astype(np.float32)
+        xj = jax.numpy.asarray(x)
+        h = jax.numpy.ones((n,))
+
+        t_rand = _time(lambda: jax.block_until_ready(
+            proposal.random_candidates(key, xj, k)))
+        t_wq = _time(lambda: jax.block_until_ready(
+            proposal.weighted_quantile_candidates(xj, h, k)))
+        csv_rows.append((f"proposal/n={n}/random", t_rand, f"k={k}"))
+        csv_rows.append((f"proposal/n={n}/weighted_quantile", t_wq,
+                         f"k={k} slowdown={t_wq / t_rand:.2f}x"))
+        if n <= 100_000:   # GK is host-side and deliberately slow
+            t_gk = _time(lambda: proposal.gk_quantile_candidates(
+                x[:, :4], k), reps=1)
+            csv_rows.append((f"proposal/n={n}/gk_summary_4feat", t_gk,
+                             f"k={k} slowdown={t_gk / t_rand:.1f}x"))

@@ -1,0 +1,39 @@
+"""Roofline summary: reads the dry-run artifacts (experiments/dryrun/*.json)
+and emits one CSV row per (arch x shape x mesh) with the three terms.
+
+Run ``python -m repro.launch.dryrun --all`` first; rows are skipped (with a
+note) for combos whose artifact is missing.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def run(csv_rows: list) -> None:
+    paths = sorted(glob.glob("experiments/dryrun/*.json"))
+    if not paths:
+        csv_rows.append(("roofline/missing", 0.0,
+                         "run python -m repro.launch.dryrun --all first"))
+        return
+    for p in paths:
+        with open(p) as f:
+            rec = json.load(f)
+        tag = f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']}"
+        if rec["status"] != "ok":
+            csv_rows.append((tag, 0.0, rec["status"]))
+            continue
+        r = rec.get("roofline")
+        if not r:
+            csv_rows.append((tag, 0.0, "lowering-proof only (multi-pod)"))
+            continue
+        step_us = max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6
+        csv_rows.append((
+            tag, step_us,
+            f"compute={r['compute_s']*1e3:.2f}ms "
+            f"memory={r['memory_s']*1e3:.2f}ms "
+            f"collective={r['collective_s']*1e3:.2f}ms "
+            f"dom={r['dominant']} "
+            f"useful={rec.get('useful_flops_ratio', 0):.2f}"))

@@ -1,0 +1,74 @@
+"""Table 2 reproduction: DT / GBDT accuracy + proposal time, S vs Q.
+
+Synthetic analogues of the paper's dataset families (see
+repro/data/tabular.py), at reduced row counts, over the paper's bin
+sweep.  Columns mirror the paper: DT(S), DT(Q), XGB(S), XGB(Q), T(S),
+T(Q) — here S = random sampling, Q = weighted-quantile sketch.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import boosting
+from repro.data import make_dataset
+
+DATASETS = [
+    ("susy-like", 20_000, 5_000),
+    ("higgs-like", 20_000, 5_000),
+    ("wiretap-like", 10_000, 2_500),
+    ("pjm-like", 10_000, 2_500),
+]
+BINS = [10, 50]
+
+
+def _metric(model, x, y, task):
+    if task == "class":
+        return boosting.accuracy(model, x, y)
+    return boosting.mape(model, x, y)
+
+
+def run(csv_rows: list) -> None:
+    import jax.numpy as jnp
+    from repro.core import proposal
+
+    for name, ntr, nte in DATASETS:
+        xtr, ytr, xte, yte, task = make_dataset(name, ntr, nte)
+        obj = "logistic" if task == "class" else "mse"
+        n_trees_dt, n_trees_xgb = 1, (20 if task == "class" else 50)
+        for bins in BINS:
+            # warm the proposal jit caches for THESE shapes so T columns
+            # measure the algorithm, not XLA compilation
+            xj = jnp.asarray(xtr)
+            hj = jnp.ones(xtr.shape[0])
+            jax.block_until_ready(proposal.random_candidates(
+                jax.random.PRNGKey(0), xj, bins))
+            jax.block_until_ready(proposal.weighted_quantile_candidates(
+                xj, hj, bins))
+            row = {}
+            for tag, strat in (("S", "random"), ("Q", "weighted_quantile")):
+                t0 = time.perf_counter()
+                cfg = boosting.GBDTConfig(
+                    n_trees=n_trees_xgb, max_depth=6, n_candidates=bins,
+                    strategy=strat, objective=obj)
+                m = boosting.fit(xtr, ytr, cfg, jax.random.PRNGKey(0))
+                fit_us = (time.perf_counter() - t0) * 1e6
+                row[f"XGB({tag})"] = _metric(m, xte, yte, task)
+                row[f"T({tag})"] = m.proposal_seconds * 1e3   # ms, Table 2
+                # single tree (DT columns)
+                cfg1 = boosting.GBDTConfig(
+                    n_trees=1, max_depth=6, n_candidates=bins,
+                    strategy=strat, objective=obj)
+                m1 = boosting.fit(xtr, ytr, cfg1, jax.random.PRNGKey(0))
+                row[f"DT({tag})"] = _metric(m1, xte, yte, task)
+                csv_rows.append((f"table2/{name}/bins={bins}/{tag}",
+                                 fit_us,
+                                 f"DT={row[f'DT({tag})']:.4f} "
+                                 f"XGB={row[f'XGB({tag})']:.4f} "
+                                 f"Tprop_ms={row[f'T({tag})']:.1f}"))
+            gap = abs(row["XGB(S)"] - row["XGB(Q)"])
+            csv_rows.append((f"table2/{name}/bins={bins}/S_vs_Q_gap", 0.0,
+                             f"{gap:.4f}"))

@@ -1,0 +1,15 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import dataclasses
+from repro.configs import get_config, INPUT_SHAPES
+from repro.launch.dryrun import build_lowered
+from repro.launch.mesh import make_production_mesh
+
+# D config: group-aware core (in code) + bf16 intra-chunk, seq_shard stays ON
+cfg = dataclasses.replace(get_config("zamba2-2.7b"), ssm_compute_dtype="bf16")
+mesh = make_production_mesh()
+lowered, _ = build_lowered(cfg, INPUT_SHAPES["train_4k"], mesh)
+ma = lowered.compile().memory_analysis()
+print("D-config zamba2 train_4k: arg GB",
+      round(ma.argument_size_in_bytes / 2**30, 1),
+      "temp GB", round(ma.temp_size_in_bytes / 2**30, 1))

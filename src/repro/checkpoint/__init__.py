@@ -1,0 +1,5 @@
+"""Checkpoint substrate."""
+
+from .npz import save_checkpoint, restore_checkpoint, latest_step
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]

@@ -1,0 +1,85 @@
+"""Flat-path npz checkpointing with sharding-aware restore.
+
+Pytrees are flattened to ``a/b/c``-keyed arrays inside a single .npz per
+step.  On restore, arrays are device_put against the provided shardings
+(pass the train-state sharding tree from the launcher to restore straight
+into a sharded pjit state).  Writes are atomic (tmp + rename).
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import tempfile
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_key_str(k) for k in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return f"#{k.idx}"
+    return str(k)
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    flat = _flatten(tree)
+    fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp")
+    with os.fdopen(fd, "wb") as f:
+        np.savez(f, **flat)
+    os.replace(tmp, path)
+    return path
+
+
+def restore_checkpoint(path: str, target, shardings=None):
+    """Restore into the structure of ``target`` (a pytree of arrays or
+    ShapeDtypeStructs).  ``shardings``: optional matching pytree of
+    jax.sharding.Sharding for direct sharded placement."""
+    with np.load(path) as data:
+        leaves_paths = jax.tree_util.tree_flatten_with_path(target)
+        flat_target, treedef = jax.tree_util.tree_flatten(target)
+        shard_flat = (jax.tree_util.tree_leaves(shardings)
+                      if shardings is not None else [None] * len(flat_target))
+        out = []
+        for (path_k, leaf), sh in zip(leaves_paths[0], shard_flat):
+            key = _SEP.join(_key_str(k) for k in path_k)
+            if key not in data:
+                raise KeyError(f"checkpoint missing {key!r}")
+            arr = data[key]
+            if arr.shape != tuple(leaf.shape):
+                raise ValueError(
+                    f"shape mismatch for {key}: ckpt {arr.shape} vs "
+                    f"target {tuple(leaf.shape)}")
+            try:
+                arr = arr.astype(leaf.dtype)
+            except (ValueError, TypeError):
+                # numpy stores ml_dtypes (bf16, fp8) as raw void; reinterpret
+                import ml_dtypes
+                arr = arr.view(np.dtype(leaf.dtype)) \
+                    if arr.dtype.kind == "V" else arr.astype(
+                        ml_dtypes.bfloat16).astype(leaf.dtype)
+            out.append(jax.device_put(arr, sh) if sh is not None
+                       else jax.numpy.asarray(arr))
+        return jax.tree_util.tree_unflatten(leaves_paths[1], out)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
+             if (m := re.match(r"step_(\d+)\.npz$", f))]
+    return max(steps) if steps else None

@@ -1,0 +1,12 @@
+"""Core library: the paper's contribution.
+
+Random split-point sampling for distributed decision-tree building
+(Kumar & Edakunni 2021), plus the quantile-sketch baselines it is
+measured against, a binned level-wise tree builder, a GBDT trainer, and
+the shard_map distributed form of the paper's Algorithm 1.
+"""
+
+from . import binning, boosting, distributed, proposal, rank_error, sketch, tree
+
+__all__ = ["binning", "boosting", "distributed", "proposal", "rank_error",
+           "sketch", "tree"]

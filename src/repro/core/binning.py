@@ -1,0 +1,45 @@
+"""Bucketising features against a shared candidate grid.
+
+Convention (must stay consistent with tree.py / split.py):
+
+  bin_id(x, c) = #{ c_i < x }  = searchsorted(c, x, side='left')
+
+  A split at candidate index s sends a row LEFT iff bin_id <= s,
+  equivalently  x <= c_s  on raw values.  nbins = k + 1.
+
+Binning happens once per proposal (per boosting round for re-proposed
+candidates); trees then operate entirely on uint8/int32 bin ids — the
+paper's 'data read' stage.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def bin_features(x: jax.Array, candidates: jax.Array) -> jax.Array:
+    """Map raw features to bin ids.
+
+    Args:
+      x: (n, f) raw features.
+      candidates: (f, k) sorted candidate values.
+
+    Returns:
+      (n, f) int32 bin ids in [0, k].
+    """
+    def per_feature(col, cand):
+        return jnp.searchsorted(cand, col, side="left").astype(jnp.int32)
+
+    return jax.vmap(per_feature, in_axes=(1, 0), out_axes=1)(x, candidates)
+
+
+@partial(jax.jit, static_argnames=("nbins",))
+def bin_counts(bins: jax.Array, nbins: int) -> jax.Array:
+    """Histogram of rows per (feature, bin) — diagnostics/load stats."""
+    n, f = bins.shape
+    one_hot = jax.nn.one_hot(bins, nbins, dtype=jnp.int32)  # (n, f, nbins)
+    return one_hot.sum(axis=0)

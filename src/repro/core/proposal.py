@@ -1,0 +1,154 @@
+"""Candidate split-point proposal strategies.
+
+The paper's contribution is the ``random`` strategy (uniform sampling of
+feature values) plus its distributed form (Algorithm 1: local sample →
+AllReduce/all-gather → shared resample).  The baselines it is measured
+against are the "data faithful" strategies: GK quantile summary
+(XGBoost's unweighted limit), the weighted quantile sketch (XGBoost
+proper), and fixed uniform-range bins (CatBoost-style).
+
+All strategies return a dense ``(n_features, k)`` float32 array of sorted
+candidate values; a feature with fewer distinct values than k simply
+repeats values (binning collapses duplicates into empty bins, which is
+harmless for split finding).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import sketch
+
+Strategy = Literal["random", "gk_quantile", "weighted_quantile",
+                   "uniform_range", "exact"]
+
+
+# ---------------------------------------------------------------------------
+# The paper's method: uniform random sampling (jit-able, O(n) per feature).
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("k",))
+def random_candidates(key: jax.Array, x: jax.Array, k: int) -> jax.Array:
+    """Uniform random candidates for every feature.
+
+    Args:
+      key: PRNG key.
+      x: (n, f) feature matrix.
+      k: candidates per feature.
+
+    Returns:
+      (f, k) sorted candidates.
+    """
+    n, f = x.shape
+
+    def per_feature(key, col):
+        idx = jax.random.randint(key, (k,), 0, n)
+        return jnp.sort(col[idx])
+
+    keys = jax.random.split(key, f)
+    return jax.vmap(per_feature)(keys, x.T)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def random_candidates_local(key: jax.Array, x_local: jax.Array, k: int) -> jax.Array:
+    """Per-worker local sampling done 'during data read' (Appendix 6.1)."""
+    return random_candidates(key, x_local, k)
+
+
+def resample_gathered(key: jax.Array, gathered: jax.Array, k: int) -> jax.Array:
+    """Algorithm 1's post-AllReduce step: combine then resample to size k.
+
+    Args:
+      gathered: (workers, f, k) candidates from every worker
+        (the all-gather result — identical on every worker).
+      k: target candidates per feature.
+
+    Returns:
+      (f, k) sorted candidates — deterministic in ``key`` so every worker
+      computes the *same* set without a second broadcast.
+    """
+    w, f, kk = gathered.shape
+    pool = jnp.transpose(gathered, (1, 0, 2)).reshape(f, w * kk)
+
+    def per_feature(key, row):
+        idx = jax.random.randint(key, (k,), 0, row.shape[0])
+        return jnp.sort(row[idx])
+
+    keys = jax.random.split(key, f)
+    return jax.vmap(per_feature)(keys, pool)
+
+
+# ---------------------------------------------------------------------------
+# Baselines ("data faithful").
+# ---------------------------------------------------------------------------
+
+def gk_quantile_candidates(x: np.ndarray, k: int) -> np.ndarray:
+    """GK-summary candidates per feature (host-side; deliberately costly)."""
+    x = np.asarray(x)
+    out = np.empty((x.shape[1], k), dtype=np.float32)
+    for j in range(x.shape[1]):
+        c = sketch.gk_candidates(x[:, j], k)
+        out[j] = np.pad(c, (0, k - len(c)), mode="edge") if len(c) < k else c[:k]
+    return out
+
+
+@partial(jax.jit, static_argnames=("k",))
+def weighted_quantile_candidates(x: jax.Array, hess: jax.Array, k: int) -> jax.Array:
+    """XGBoost weighted-quantile candidates; hessian-weighted."""
+    return jax.vmap(lambda col: sketch.weighted_quantiles(col, hess, k))(x.T)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def uniform_range_candidates(x: jax.Array, k: int) -> jax.Array:
+    """CatBoost-style fixed bins: k evenly spaced points in [min, max]."""
+    lo = jnp.min(x, axis=0)
+    hi = jnp.max(x, axis=0)
+    t = jnp.arange(1, k + 1) / (k + 1)
+    return lo[:, None] + (hi - lo)[:, None] * t[None, :]
+
+
+def exact_candidates(x: np.ndarray, k: int) -> np.ndarray:
+    """All unique values, capped at k per feature (greedy exact baseline).
+
+    With k >= number of unique values this reproduces the exact greedy
+    algorithm; used for correctness tests on small data.
+    """
+    x = np.asarray(x)
+    out = np.empty((x.shape[1], k), dtype=np.float32)
+    for j in range(x.shape[1]):
+        u = np.unique(x[:, j]).astype(np.float32)
+        if len(u) >= k:
+            idx = np.linspace(0, len(u) - 1, k).round().astype(int)
+            out[j] = u[idx]
+        else:
+            out[j] = np.pad(u, (0, k - len(u)), mode="edge")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Unified front end.
+# ---------------------------------------------------------------------------
+
+def propose(strategy: Strategy, x, k: int, *, key: jax.Array | None = None,
+            hess: jax.Array | None = None) -> jnp.ndarray:
+    """Single-host proposal dispatch (distributed version in distributed.py)."""
+    if strategy == "random":
+        if key is None:
+            raise ValueError("random proposal needs a PRNG key")
+        return random_candidates(key, jnp.asarray(x), k)
+    if strategy == "gk_quantile":
+        return jnp.asarray(gk_quantile_candidates(np.asarray(x), k))
+    if strategy == "weighted_quantile":
+        if hess is None:
+            hess = jnp.ones(x.shape[0], dtype=jnp.float32)
+        return weighted_quantile_candidates(jnp.asarray(x), hess, k)
+    if strategy == "uniform_range":
+        return uniform_range_candidates(jnp.asarray(x), k)
+    if strategy == "exact":
+        return jnp.asarray(exact_candidates(np.asarray(x), k))
+    raise ValueError(f"unknown strategy {strategy!r}")

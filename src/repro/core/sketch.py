@@ -1,0 +1,136 @@
+"""Quantile sketches — the "data faithful" baselines the paper argues against.
+
+Two implementations:
+
+* :class:`GKSummary` — a faithful Greenwald–Khanna (SIGMOD'01) streaming
+  summary with the (v, g, Δ) tuple representation, INSERT and COMPRESS.
+  This is the structure XGBoost's sketch generalises (with weights).
+  Rank-query error is guaranteed ≤ εn.  It is intentionally host-side
+  (numpy): the whole point of the paper is that this machinery costs more
+  than random sampling, and we benchmark exactly that.
+
+* :func:`weighted_quantiles` — the XGBoost-style weighted variant: split
+  candidates at equal steps of cumulative *hessian* weight.  Used by the
+  ``weighted_quantile`` proposal strategy (vectorised, jax).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+class GKSummary:
+    """Greenwald–Khanna ε-approximate quantile summary.
+
+    Maintains tuples (v_i, g_i, Δ_i) with  Σ_{j<=i} g_j - 1 <= rmin(v_i)
+    and rmin(v_i) + Δ_i = rmax(v_i); the invariant g_i + Δ_i <= 2εn
+    guarantees any rank query is answered within εn.
+    """
+
+    def __init__(self, eps: float):
+        if not 0 < eps < 1:
+            raise ValueError("eps must be in (0,1)")
+        self.eps = eps
+        self.n = 0
+        # columns: value, g, delta
+        self._v: list[float] = []
+        self._g: list[int] = []
+        self._d: list[int] = []
+
+    def insert(self, value: float) -> None:
+        import bisect
+        i = bisect.bisect_left(self._v, value)
+        if i == 0 or i == len(self._v):
+            # new min or max: delta = 0
+            self._v.insert(i, value)
+            self._g.insert(i, 1)
+            self._d.insert(i, 0)
+        else:
+            delta = int(np.floor(2 * self.eps * self.n)) if self.n else 0
+            self._v.insert(i, value)
+            self._g.insert(i, 1)
+            self._d.insert(i, delta)
+        self.n += 1
+        # amortised compress
+        if self.n % max(1, int(1.0 / (2 * self.eps))) == 0:
+            self.compress()
+
+    def extend(self, values) -> None:
+        for v in np.asarray(values).ravel():
+            self.insert(float(v))
+
+    def compress(self) -> None:
+        """Merge adjacent tuples while g_i + g_{i+1} + Δ_{i+1} <= 2εn."""
+        if len(self._v) < 3:
+            return
+        cap = int(np.floor(2 * self.eps * self.n))
+        v, g, d = self._v, self._g, self._d
+        i = len(v) - 2
+        while i >= 1:
+            if g[i] + g[i + 1] + d[i + 1] <= cap:
+                g[i + 1] += g[i]
+                del v[i], g[i], d[i]
+            i -= 1
+
+    def query(self, phi: float) -> float:
+        """Value whose rank is within εn of ceil(φ·n)."""
+        if self.n == 0:
+            raise ValueError("empty summary")
+        target = max(1, int(np.ceil(phi * self.n)))
+        bound = self.eps * self.n
+        rmin = 0
+        for i in range(len(self._v)):
+            rmin += self._g[i]
+            rmax = rmin + self._d[i]
+            if target - rmin <= bound and rmax - target <= bound:
+                return self._v[i]
+        return self._v[-1]
+
+    def candidates(self, k: int) -> np.ndarray:
+        """k split candidates at evenly spaced quantiles (the XGBoost use)."""
+        self.compress()
+        phis = (np.arange(1, k + 1)) / (k + 1)
+        return np.array(sorted({self.query(p) for p in phis}), dtype=np.float32)
+
+    def __len__(self) -> int:
+        return len(self._v)
+
+
+def gk_candidates(values: np.ndarray, k: int) -> np.ndarray:
+    """Build a GK summary over ``values`` and query k candidates.
+
+    eps is chosen as 1/k per the paper's Section 3.2 ("we expect to have
+    as many bins as 1/eps").  Returns a sorted float32 array of <= k
+    unique candidate values.
+    """
+    sk = GKSummary(eps=1.0 / max(2, k))
+    sk.extend(values)
+    return sk.candidates(k)
+
+
+def weighted_quantiles(values: jax.Array, weights: jax.Array, k: int) -> jax.Array:
+    """XGBoost-style weighted quantile candidates (vectorised).
+
+    Candidates sit at equal steps of cumulative weight (XGBoost uses the
+    hessian as the weight; eq. (8)-(9) of the XGBoost paper).
+
+    Args:
+      values: (n,) feature values.
+      weights: (n,) nonnegative weights (e.g. hessians).
+      k: number of candidates.
+
+    Returns:
+      (k,) sorted candidate values.
+    """
+    order = jnp.argsort(values)
+    v = values[order]
+    w = jnp.maximum(weights[order], 0.0)
+    cw = jnp.cumsum(w)
+    total = cw[-1]
+    # k targets at equal weight steps (excluding 0 and total).
+    targets = (jnp.arange(1, k + 1) / (k + 1)) * total
+    idx = jnp.searchsorted(cw, targets, side="left")
+    idx = jnp.clip(idx, 0, v.shape[0] - 1)
+    return v[idx]

@@ -1,0 +1,144 @@
+"""Level-wise decision-tree growth on binned features.
+
+TPU-native adaptation of XGBoost's approximate tree builder: instead of a
+host-side node queue we grow a *complete* binary tree of static depth.
+Level d has 2^d frontier nodes; every row carries a level-local node id.
+Nodes that should not split (gain <= 0, min_child_weight violated) become
+"passthrough" nodes: every row goes LEFT, the right child is empty
+(G = H = 0 -> weight 0).  This wastes a bounded amount of compute in
+exchange for fully static shapes — the standard TPU trade.
+
+Heap layout (0-based): inner node i has children 2i+1 / 2i+2; level d
+occupies indices [2^d - 1, 2^(d+1) - 2]; leaves are the 2^max_depth
+level-(max_depth) nodes.
+
+Split semantics (consistent with binning.py):
+  row goes left  <=>  bin_id <= split_bin  <=>  x <= threshold
+where threshold = candidates[feature, split_bin].
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+
+
+class Tree(NamedTuple):
+    """A single fitted tree (all arrays static-shaped)."""
+    feature: jax.Array     # (2^depth - 1,) int32; -1 = passthrough
+    split_bin: jax.Array   # (2^depth - 1,) int32; nbins-1 for passthrough
+    threshold: jax.Array   # (2^depth - 1,) float32; +inf for passthrough
+    leaf_value: jax.Array  # (2^depth,) float32
+
+
+def _level_slice(depth: int) -> slice:
+    return slice(2 ** depth - 1, 2 ** (depth + 1) - 1)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "max_depth", "nbins", "l2", "gamma", "min_child_weight", "backend",
+    "axis_name"))
+def build_tree(bins: jax.Array, gh: jax.Array, candidates: jax.Array, *,
+               max_depth: int, nbins: int, l2: float = 1.0,
+               gamma: float = 0.0, min_child_weight: float = 1e-6,
+               backend: str = "auto",
+               axis_name: str | None = None) -> Tree:
+    """Grow one tree on binned data.
+
+    Args:
+      bins: (n, f) int32 bin ids in [0, nbins).
+      gh: (n, 2) grad/hess panel for the current boosting round.
+      candidates: (f, k) candidate values (k = nbins - 1); used only to
+        record raw thresholds for inference on unbinned data.
+      axis_name: if set, every histogram is lax.psum'd over this mesh
+        axis (distributed-XGBoost histogram AllReduce inside shard_map);
+        None = single host.
+
+    Returns:
+      A :class:`Tree`.
+    """
+    psum = (None if axis_name is None
+            else lambda a: jax.lax.psum(a, axis_name))
+    n, f = bins.shape
+    n_inner = 2 ** max_depth - 1
+    n_leaves = 2 ** max_depth
+
+    feature = jnp.full((n_inner,), -1, jnp.int32)
+    split_bin = jnp.full((n_inner,), nbins - 1, jnp.int32)
+    threshold = jnp.full((n_inner,), jnp.inf, jnp.float32)
+
+    node = jnp.zeros((n,), jnp.int32)          # level-local node id
+    for depth in range(max_depth):
+        n_nodes = 2 ** depth
+        hist = ops.hist(bins, node, gh, n_nodes=n_nodes, nbins=nbins,
+                        backend=backend)
+        if psum is not None:
+            hist = psum(hist)
+        gains, sbins = ops.split_gain(hist, l2=l2, gamma=gamma,
+                                      min_child_weight=min_child_weight,
+                                      backend=backend)       # (nodes, f)
+        best_f = jnp.argmax(gains, axis=1).astype(jnp.int32)  # (nodes,)
+        best_gain = jnp.take_along_axis(gains, best_f[:, None], 1)[:, 0]
+        best_s = jnp.take_along_axis(sbins, best_f[:, None], 1)[:, 0]
+
+        do_split = best_gain > 0.0
+        lvl_feature = jnp.where(do_split, best_f, -1)
+        lvl_sbin = jnp.where(do_split, best_s, nbins - 1)
+        lvl_thresh = jnp.where(
+            do_split,
+            candidates[lvl_feature.clip(0), lvl_sbin.clip(0, candidates.shape[1] - 1)],
+            jnp.inf)
+
+        sl = _level_slice(depth)
+        feature = feature.at[sl].set(lvl_feature)
+        split_bin = split_bin.at[sl].set(lvl_sbin)
+        threshold = threshold.at[sl].set(lvl_thresh)
+
+        # route rows: left (2*node) if bin <= s else right (2*node + 1)
+        row_bin = jnp.take_along_axis(
+            bins, lvl_feature.clip(0)[node][:, None], axis=1)[:, 0]
+        go_left = row_bin <= lvl_sbin[node]
+        node = node * 2 + jnp.where(go_left, 0, 1)
+
+    # leaf values from final-level grad/hess totals
+    seg = jax.ops.segment_sum(gh.astype(jnp.float32), node,
+                              num_segments=n_leaves)
+    if psum is not None:
+        seg = psum(seg)
+    leaf_value = -seg[:, 0] / (seg[:, 1] + l2)
+    return Tree(feature, split_bin, threshold, leaf_value.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("max_depth",))
+def predict_binned(tree: Tree, bins: jax.Array, *, max_depth: int) -> jax.Array:
+    """Evaluate one tree on binned features; returns (n,) leaf values."""
+    n = bins.shape[0]
+    node = jnp.zeros((n,), jnp.int32)          # level-local id
+    for depth in range(max_depth):
+        heap = (2 ** depth - 1) + node
+        fidx = tree.feature[heap]
+        sbin = tree.split_bin[heap]
+        row_bin = jnp.take_along_axis(bins, fidx.clip(0)[:, None], 1)[:, 0]
+        go_left = row_bin <= sbin
+        node = node * 2 + jnp.where(go_left, 0, 1)
+    return tree.leaf_value[node]
+
+
+@functools.partial(jax.jit, static_argnames=("max_depth",))
+def predict_raw(tree: Tree, x: jax.Array, *, max_depth: int) -> jax.Array:
+    """Evaluate one tree on raw features (x <= threshold goes left)."""
+    n = x.shape[0]
+    node = jnp.zeros((n,), jnp.int32)
+    for depth in range(max_depth):
+        heap = (2 ** depth - 1) + node
+        fidx = tree.feature[heap]
+        thr = tree.threshold[heap]
+        xv = jnp.take_along_axis(x, fidx.clip(0)[:, None], 1)[:, 0]
+        go_left = xv <= thr
+        node = node * 2 + jnp.where(go_left, 0, 1)
+    return tree.leaf_value[node]

@@ -1,0 +1,8 @@
+"""Data substrate: synthetic tabular generators + LM token pipeline."""
+
+from .tabular import (friedman1, gaussian_classification, ar1_series,
+                      make_dataset)
+from .tokens import TokenPipeline
+
+__all__ = ["friedman1", "gaussian_classification", "ar1_series",
+           "make_dataset", "TokenPipeline"]

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the compute hot-spots.
+
+hist            — gradient/hessian histogram as one-hot MXU matmul
+split_gain      — best-split scan over histogram bins
+flash_attention — blockwise attention (GQA + sliding window)
+
+Call through :mod:`repro.kernels.ops`; oracles in :mod:`repro.kernels.ref`.
+"""
+
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,58 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Each op picks between the Pallas kernel (TPU, or interpret=True for CPU
+validation) and the pure-jnp oracle in ref.py.  Call sites in the library
+go through these wrappers only — never through the kernels directly — so
+backend selection is a single switch.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from . import ref
+from .hist import hist_pallas
+from .split_gain import split_gain_pallas
+from .flash_attention import flash_attention_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def hist(bins, node, gh, *, n_nodes: int, nbins: int,
+         backend: str = "auto"):
+    """Gradient/hessian histogram: (n_nodes, f, nbins, 2).
+
+    backend: 'auto' | 'pallas' | 'interpret' | 'ref'
+    """
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else "ref"
+    if backend == "ref":
+        return ref.hist_ref(bins, node, gh, n_nodes=n_nodes, nbins=nbins)
+    return hist_pallas(bins, node, gh, n_nodes=n_nodes, nbins=nbins,
+                       interpret=(backend == "interpret"))
+
+
+def split_gain(hist_arr, *, l2: float = 1.0, gamma: float = 0.0,
+               min_child_weight: float = 1e-6, backend: str = "auto"):
+    """Best (gain, bin) per (node, feature) from a histogram."""
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else "ref"
+    if backend == "ref":
+        return ref.split_gain_ref(hist_arr, l2=l2, gamma=gamma,
+                                  min_child_weight=min_child_weight)
+    return split_gain_pallas(hist_arr, l2=l2, gamma=gamma,
+                             min_child_weight=min_child_weight,
+                             interpret=(backend == "interpret"))
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    backend: str = "auto"):
+    """Blockwise attention with GQA + optional sliding window."""
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else "ref"
+    if backend == "ref":
+        return ref.attention_ref(q, k, v, causal=causal, window=window)
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  interpret=(backend == "interpret"))

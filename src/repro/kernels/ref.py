@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These are the correctness ground truth for the Pallas kernels
+(tests assert allclose against them across shape/dtype sweeps) and the
+fallback implementation on backends without Pallas support.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("n_nodes", "nbins"))
+def hist_ref(bins: jax.Array, node: jax.Array, gh: jax.Array, *,
+             n_nodes: int, nbins: int) -> jax.Array:
+    """(n_nodes, f, nbins, 2) grad/hess histogram via scatter-add."""
+    n, f = bins.shape
+    valid = node >= 0
+    node_c = jnp.where(valid, node, 0)
+    # flat index: ((node * f) + feat) * nbins + bin
+    flat = (node_c[:, None] * f + jnp.arange(f)[None, :]) * nbins + bins
+    w = jnp.where(valid, 1.0, 0.0)
+    vals = jnp.broadcast_to((gh * w[:, None])[:, None, :],
+                            (n, f, 2)).astype(jnp.float32)
+    out = jnp.zeros((n_nodes * f * nbins, 2), jnp.float32)
+    out = out.at[flat.ravel()].add(vals.reshape(n * f, 2))
+    return out.reshape(n_nodes, f, nbins, 2)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _score(g, h, l2):
+    return (g * g) / (h + l2)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def split_gain_ref(hist: jax.Array, *, l2: float = 1.0, gamma: float = 0.0,
+                   min_child_weight: float = 1e-6):
+    """Best gain / split-bin per (node, feature) — oracle for split_gain."""
+    g = hist[..., 0]
+    h = hist[..., 1]
+    gl = jnp.cumsum(g, axis=2)
+    hl = jnp.cumsum(h, axis=2)
+    gt = gl[..., -1:]
+    ht = hl[..., -1:]
+    gr = gt - gl
+    hr = ht - hl
+    gain = 0.5 * (_score(gl, hl, l2) + _score(gr, hr, l2)
+                  - _score(gt, ht, l2)) - gamma
+    nbins = gain.shape[2]
+    pos = jnp.arange(nbins)
+    ok = (hl >= min_child_weight) & (hr >= min_child_weight) \
+        & (pos < nbins - 1)
+    gain = jnp.where(ok, gain, -jnp.inf)
+    return jnp.max(gain, axis=2), jnp.argmax(gain, axis=2).astype(jnp.int32)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0) -> jax.Array:
+    """Naive fp32 attention with GQA + sliding window (oracle)."""
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    g = hq // hkv
+    k = jnp.repeat(k, g, axis=1)
+    v = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (d ** 0.5)
+    qpos = jnp.arange(sq)[:, None] + (sk - sq)  # right-aligned (cache case)
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: best-split scan over histogram bins.
+
+Given the (node, feature, bin, {g,h}) histogram, compute for every
+(node, feature) the split position maximising the XGBoost gain
+
+  gain(s) = 1/2 [ GL(s)^2/(HL(s)+l2) + GR(s)^2/(HR(s)+l2) - G^2/(H+l2) ] - gamma
+
+subject to min_child_weight on both sides.  One grid step per node; the
+whole (features, nbins) panel for a node lives in VMEM (f*nbins*2 floats —
+a few hundred KB for realistic f<=512, nbins<=256).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _split_gain_kernel(hist_ref, gain_ref, idx_ref, *,
+                       l2: float, gamma: float, min_child_weight: float):
+    hist = hist_ref[0]                       # (f, nbins, 2) f32
+    g = hist[..., 0]
+    h = hist[..., 1]
+    gl = jnp.cumsum(g, axis=1)               # (f, nbins) left sums incl bin s
+    hl = jnp.cumsum(h, axis=1)
+    gt = gl[:, -1:]
+    ht = hl[:, -1:]
+    gr = gt - gl
+    hr = ht - hl
+
+    def score(gg, hh):
+        return (gg * gg) / (hh + l2)
+
+    gain = 0.5 * (score(gl, hl) + score(gr, hr) - score(gt, ht)) - gamma
+    ok = (hl >= min_child_weight) & (hr >= min_child_weight)
+    # splitting at the last bin puts everything left — never useful
+    nbins = gain.shape[1]
+    pos = jax.lax.broadcasted_iota(jnp.int32, gain.shape, 1)
+    ok &= pos < (nbins - 1)
+    gain = jnp.where(ok, gain, -jnp.inf)
+
+    gain_ref[0] = jnp.max(gain, axis=1)
+    idx_ref[0] = jnp.argmax(gain, axis=1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "l2", "gamma", "min_child_weight", "interpret"))
+def split_gain_pallas(hist: jax.Array, *, l2: float = 1.0, gamma: float = 0.0,
+                      min_child_weight: float = 1e-6,
+                      interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """Best gain and split-bin per (node, feature).
+
+    Args:
+      hist: (n_nodes, f, nbins, 2) float32 histogram.
+
+    Returns:
+      gains: (n_nodes, f) float32 (-inf where no legal split).
+      idx:   (n_nodes, f) int32 best bin index s (split: bin <= s goes left).
+    """
+    n_nodes, f, nbins, _ = hist.shape
+    kern = functools.partial(_split_gain_kernel, l2=float(l2),
+                             gamma=float(gamma),
+                             min_child_weight=float(min_child_weight))
+    gains, idx = pl.pallas_call(
+        kern,
+        grid=(n_nodes,),
+        in_specs=[pl.BlockSpec((1, f, nbins, 2), lambda i: (i, 0, 0, 0))],
+        out_specs=[
+            pl.BlockSpec((1, f), lambda i: (i, 0)),
+            pl.BlockSpec((1, f), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_nodes, f), jnp.float32),
+            jax.ShapeDtypeStruct((n_nodes, f), jnp.int32),
+        ],
+        interpret=interpret,
+    )(hist)
+    return gains, idx

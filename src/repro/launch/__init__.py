@@ -1,0 +1,10 @@
+"""Launch layer: meshes, sharding rules, step factories, dry-run, trainers.
+
+NOTE: do not import .dryrun from here — it sets XLA_FLAGS at import time
+(512 placeholder devices) and must only be imported by the dry-run entry
+point itself.
+"""
+
+from . import mesh, roofline, shardings, specs, steps
+
+__all__ = ["mesh", "roofline", "shardings", "specs", "steps"]

@@ -1,0 +1,126 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimbing harness: re-run a dry-run combo with config overrides
+and report the roofline-term deltas against the recorded baseline.
+
+Usage:
+  python -m repro.launch.hillclimb --arch zamba2-2.7b --shape train_4k \
+      --set train_microbatches=1 --set seq_shard=False --tag mb1_noseq
+"""
+
+import argparse
+import dataclasses
+import json
+
+from ..configs import INPUT_SHAPES, get_config
+from . import dryrun
+
+
+def parse_override(s: str):
+    k, v = s.split("=", 1)
+    for cast in (int, float):
+        try:
+            return k, cast(v)
+        except ValueError:
+            pass
+    if v in ("True", "False"):
+        return k, v == "True"
+    return k, v
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg overrides, e.g. --set train_microbatches=1")
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--out-dir", default="experiments/hillclimb")
+    ap.add_argument("--baseline-dir", default="experiments/dryrun")
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the full scanned compile (no memory "
+                         "analysis): measure per-unit costs from the "
+                         "1- and 2-unit unrolled variants only")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    overrides = dict(parse_override(s) for s in args.set)
+    cfg = dataclasses.replace(cfg, **overrides)
+
+    if args.fast:
+        # c1-only protocol: compile ONLY the 1-unit unrolled variant and
+        # compare against the baseline's recorded delta_detail.c1.  Exact
+        # for per-layer effects (which is what every §Perf change here
+        # targets); ~10x faster than the full delta on the hybrid archs.
+        import jax
+        from .mesh import make_production_mesh
+        shape = INPUT_SHAPES[args.shape]
+        if cfg.family == "moe" and cfg.moe_groups == 1:
+            cfg2 = dataclasses.replace(cfg, moe_groups=16)
+        else:
+            cfg2 = cfg
+        mesh = make_production_mesh()
+        c1 = dryrun._compile_cost(dryrun._delta_cfg(cfg2, 1), shape, mesh)
+        rec = {"arch": args.arch, "shape": args.shape, "status": "ok",
+               "c1": c1}
+        base_path = os.path.join(
+            args.baseline_dir,
+            f"{args.arch}__{args.shape}__pod16x16.json")
+        base = json.load(open(base_path))
+        b1 = base["delta_detail"]["c1"]
+        rec["tag"] = args.tag
+        rec["overrides"] = overrides
+        os.makedirs(args.out_dir, exist_ok=True)
+        with open(os.path.join(
+                args.out_dir,
+                f"{args.arch}__{args.shape}__{args.tag}.json"), "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"[hillclimb-c1] {args.arch} x {args.shape} [{args.tag}] "
+              f"{overrides}")
+        for k in ("flops", "bytes"):
+            d = (c1[k] - b1[k]) / b1[k] * 100 if b1[k] else 0.0
+            print(f"  c1 {k:6s} {c1[k]:.4g}  baseline {b1[k]:.4g}  "
+                  f"({d:+.1f}%)")
+        cb = sum(c1["coll"].values())
+        bb = sum(b1["coll"].values())
+        print(f"  c1 coll   {cb:.4g}  baseline {bb:.4g}  "
+              f"({(cb-bb)/bb*100 if bb else 0:+.1f}%)")
+        return
+    else:
+        rec = dryrun.run_one(args.arch, args.shape, multi_pod=False,
+                             cfg=cfg, out_dir=None, verbose=False)
+    rec["tag"] = args.tag
+    rec["overrides"] = overrides
+    os.makedirs(args.out_dir, exist_ok=True)
+    fname = f"{args.arch}__{args.shape}__{args.tag}.json"
+    with open(os.path.join(args.out_dir, fname), "w") as f:
+        json.dump(rec, f, indent=1)
+
+    base_path = os.path.join(
+        args.baseline_dir, f"{args.arch}__{args.shape}__pod16x16.json")
+    base = json.load(open(base_path)) if os.path.exists(base_path) else None
+
+    if rec["status"] != "ok":
+        print(f"[hillclimb] {args.tag}: ERROR {rec.get('error')}")
+        print(rec.get("traceback", "")[-1500:])
+        raise SystemExit(1)
+
+    r = rec["roofline"]
+    print(f"[hillclimb] {args.arch} x {args.shape} [{args.tag}] "
+          f"{overrides}")
+    for term in ("compute_s", "memory_s", "collective_s"):
+        line = f"  {term:13s} {r[term]*1e3:10.2f} ms"
+        if base and "roofline" in base:
+            b = base["roofline"][term]
+            if b > 0:
+                line += f"   ({(r[term]-b)/b*100:+.1f}% vs baseline)"
+        print(line)
+    ma = rec.get("memory_analysis", {})
+    print(f"  temp GB/dev   {ma.get('temp_size_in_bytes', 0)/2**30:10.1f}"
+          f"   arg GB/dev {ma.get('argument_size_in_bytes', 0)/2**30:.1f}")
+    print(f"  dominant      {r['dominant']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from the
+dry-run artifacts.
+
+Usage: python -m repro.launch.report [--dir experiments/dryrun]
+Prints markdown to stdout (the EXPERIMENTS.md sections are refreshed by
+piping this output).
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(dirname: str) -> list[dict]:
+    recs = []
+    for p in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_bytes(b) -> str:
+    if b is None:
+        return "-"
+    return f"{b / 2**30:.2f}"
+
+
+def dryrun_table(recs: list[dict]) -> str:
+    out = ["| arch | shape | mesh | status | lower+compile s | "
+           "arg GB/dev | temp GB/dev | collective bytes/dev |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        ma = r.get("memory_analysis", {})
+        coll = r.get("collective_bytes") or r.get(
+            "collective_bytes_scanned_raw", {})
+        tot_coll = sum(v for v in coll.values()) if coll else 0
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['status']} | "
+            f"{r.get('lower_s', 0)}+{r.get('compile_s', 0)} | "
+            f"{fmt_bytes(ma.get('argument_size_in_bytes'))} | "
+            f"{fmt_bytes(ma.get('temp_size_in_bytes'))} | "
+            f"{tot_coll:.3g} |")
+    return "\n".join(out)
+
+
+def roofline_table(recs: list[dict]) -> str:
+    out = ["| arch | shape | compute ms | memory ms | collective ms | "
+           "dominant | useful-FLOPs ratio | params |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("mesh") != "pod16x16" or "roofline" not in r:
+            continue
+        rf = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | "
+            f"{rf['compute_s']*1e3:.2f} | {rf['memory_s']*1e3:.2f} | "
+            f"{rf['collective_s']*1e3:.2f} | **{rf['dominant']}** | "
+            f"{r.get('useful_flops_ratio', 0):.2f} | "
+            f"{r.get('n_params', 0)/1e9:.2f}B |")
+    skips = [r for r in recs if r.get("status") == "skipped"]
+    for r in skips:
+        out.append(f"| {r['arch']} | {r['shape']} | - | - | - | skipped | "
+                   f"- | {r.get('reason', '')} |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--section", choices=["dryrun", "roofline", "both"],
+                    default="both")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    if args.section in ("dryrun", "both"):
+        print("## §Dry-run\n")
+        print(dryrun_table(recs))
+        print()
+    if args.section in ("roofline", "both"):
+        print("## §Roofline (single-pod 16x16, per-chip terms)\n")
+        print(roofline_table(recs))
+
+
+if __name__ == "__main__":
+    main()

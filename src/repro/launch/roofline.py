@@ -1,0 +1,133 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms, per (arch x shape x mesh), in seconds (TPU v5e constants):
+
+  compute    = HLO_FLOPs      / (chips * 197e12 FLOP/s bf16)
+  memory     = HLO_bytes      / (chips * 819e9  B/s HBM)
+  collective = collective_B   / (chips * 50e9   B/s per ICI link)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``; collective
+bytes are parsed from the post-SPMD HLO text by summing operand sizes of
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+ops.  MODEL_FLOPS = 6*N*D (N = params, active params for MoE; D = tokens)
+gives the useful-compute ratio.
+"""
+
+from __future__ import annotations
+
+import re
+
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of one (possibly tuple) HLO shape string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum of operand bytes per collective op kind in an HLO module."""
+    # first pass: result type of every named value
+    types: dict[str, str] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        # rhs starts with the result type, e.g. "f32[8,128]{1,0} add(..."
+        tm = re.match(r"^(\([^)]*\)|[\w]+\[[\d,]*\](?:\{[^}]*\})?)", rhs)
+        if tm:
+            types[name] = tm.group(1)
+
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        _, rhs = m.groups()
+        opm = re.search(r"\b(" + "|".join(_COLLECTIVES) + r")"
+                        r"(?:-start|-done)?\(", rhs)
+        if not opm:
+            continue
+        kind = opm.group(1)
+        if "-done(" in rhs:
+            continue  # avoid double count of async pairs
+        # operands: %name tokens inside the call parens
+        args = re.findall(r"%([\w.\-]+)", rhs.split("(", 1)[1])
+        b = sum(_shape_bytes(types.get(a, "")) for a in args)
+        if b == 0:
+            # fall back to the result type (sync ops: result==operand size
+            # for all-reduce / permute)
+            tm = re.match(r"^(\([^)]*\)|[\w]+\[[\d,]*\](?:\{[^}]*\})?)", rhs)
+            if tm:
+                b = _shape_bytes(tm.group(1))
+        out[kind] += b
+    return out
+
+
+def roofline_terms(cost: dict, coll_bytes: int, n_chips: int) -> dict:
+    """The three terms in seconds + the dominant one.
+
+    cost_analysis / the parsed HLO describe ONE SPMD partition (XLA
+    compiles a single per-device program), so each term is simply the
+    per-device quantity over the per-device peak; n_chips is kept for
+    reference fields only.
+    """
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    t_compute = flops / PEAK_FLOPS
+    t_memory = byts / HBM_BW
+    t_coll = coll_bytes / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    terms["dominant"] = max(terms, key=lambda k: terms[k]).replace("_s", "")
+    return terms
+
+
+def model_flops(cfg, n_params: int, n_active_params: int, tokens: int,
+                kind: str) -> float:
+    """6*N*D (training) or 2*N*D (single forward / decode)."""
+    n = n_active_params if cfg.family == "moe" else n_params
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n * tokens
+
+
+def count_params(shapes_tree) -> int:
+    import jax
+    return sum(int(l.size) for l in jax.tree.leaves(shapes_tree))
+
+
+def count_active_params(cfg, shapes_tree) -> int:
+    """MoE: count routed experts at top_k/n_experts utilisation."""
+    import jax
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes_tree)[0]:
+        ps = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path)
+        sz = int(leaf.size)
+        if cfg.family == "moe" and re.search(r"moe/w[igo]$", ps):
+            sz = int(sz * cfg.top_k / cfg.n_experts)
+        total += sz
+    return total

@@ -1,0 +1,166 @@
+"""Parameter / optimizer / input sharding rules.
+
+Rules are (regex over the flattened param path) -> per-dimension logical
+roles; a role maps to mesh axes only when the dimension size is divisible
+by the axes' product (otherwise that dimension is replicated — e.g. MQA
+kv projections with 1 head stay replicated rather than splitting a single
+head's feature dim across the tensor-parallel axis).
+
+Optimizer m/v (and any fp32 master state) additionally get the ZeRO-1
+rule: the largest still-unsharded dimension divisible by the 'data' axis
+is sharded over 'data', spreading optimizer memory across the pod.
+"""
+
+from __future__ import annotations
+
+import re
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .mesh import batch_axes
+
+# path-regex -> tuple of logical roles per dim (None = replicate)
+# roles: 'tp' (model axis), 'ep' (experts over model axis)
+_RULES: list[tuple[str, tuple]] = [
+    (r"embed/table$", ("tp", None)),              # vocab sharded
+    (r"unembed/w$", (None, "tp")),
+    (r"(wq|wi|wg|up|wx)/w$", (None, "tp")),       # column parallel
+    (r"(mlp|shared)/(wi|wg)$", (None, "tp")),     # MLP dicts hold raw arrays
+    (r"(mlp|shared)/wo$", ("tp", None)),
+    (r"(wk|wv)/w$", (None, "tp_heads")),          # only if kv heads divide
+    (r"(wo|down|out_proj)/w$", ("tp", None)),     # row parallel
+    (r"(wq|wk|wv|wi|wg|up|wx)/b$", ("tp",)),
+    (r"moe/wi$", ("ep", None, None)),             # expert parallel
+    (r"moe/wg$", ("ep", None, None)),
+    (r"moe/wo$", ("ep", None, None)),
+    (r"in_proj/w$", (None, "tp")),                # mamba2 fused projection
+    (r"r$", ("tp", None, None)),                  # slstm recurrent (per head)
+    (r"wif/w$", (None, None)),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+    return "/".join(parts)
+
+
+def param_spec(path_str: str, shape, mesh, cfg=None) -> P:
+    """PartitionSpec for one parameter."""
+    m = mesh.shape.get("model", 1)
+    for pat, roles in _RULES:
+        if re.search(pat, path_str):
+            spec = []
+            # stacked-layer leading axes (scan stacking) are replicated;
+            # roles apply to the trailing dims
+            extra = len(shape) - len(roles)
+            spec.extend([None] * extra)
+            for dim, role in zip(shape[extra:], roles):
+                if role in ("tp", "ep") and dim % m == 0:
+                    spec.append("model")
+                elif role == "tp_heads" and cfg is not None and \
+                        cfg.n_kv_heads % m == 0 and dim % m == 0:
+                    spec.append("model")
+                else:
+                    spec.append(None)
+            return P(*spec)
+    return P()  # norms, scalars, routers: replicated
+
+
+def zero_extend(spec: P, shape, mesh) -> P:
+    """ZeRO-1: shard the largest unsharded dim of optimizer state over
+    'data' (and 'pod' when present, for the multi-pod mesh)."""
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    n = int(np.prod([mesh.shape[a] for a in axes]))
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    best, best_dim = -1, 0
+    for i, (s, dim) in enumerate(zip(parts, shape)):
+        if s is None and dim % n == 0 and dim > best_dim:
+            best, best_dim = i, dim
+    if best >= 0:
+        parts[best] = tuple(axes) if len(axes) > 1 else axes[0]
+    return P(*parts)
+
+
+FSDP_THRESHOLD_BYTES = 4 << 30   # per-device params beyond this -> FSDP
+
+
+def _tp_only_bytes_per_device(param_shapes, mesh, cfg) -> int:
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(param_shapes)[0]:
+        spec = param_spec(_path_str(path), leaf.shape, mesh, cfg)
+        denom = 1
+        for s in spec:
+            if s is None:
+                continue
+            for a in (s if isinstance(s, tuple) else (s,)):
+                denom *= mesh.shape[a]
+        total += leaf.size * leaf.dtype.itemsize // denom
+    return total
+
+
+def param_shardings(param_shapes, mesh, cfg=None, fsdp: str = "auto"):
+    """Tree of NamedShardings matching a tree of ShapeDtypeStructs.
+
+    fsdp: 'auto' enables ZeRO-3/FSDP-style extra sharding of every param
+    over the data axes when the TP-only per-device footprint exceeds
+    FSDP_THRESHOLD_BYTES (the 235B MoE and the deep granite stacks need
+    it to fit 16 GB HBM); 'on'/'off' force the choice.
+    """
+    use_fsdp = (fsdp == "on" or
+                (fsdp == "auto" and _tp_only_bytes_per_device(
+                    param_shapes, mesh, cfg) > FSDP_THRESHOLD_BYTES))
+
+    def one(path, leaf):
+        spec = param_spec(_path_str(path), leaf.shape, mesh, cfg)
+        if use_fsdp:
+            spec = zero_extend(spec, leaf.shape, mesh)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(one, param_shapes)
+
+
+def opt_shardings(opt_shapes, mesh, cfg=None):
+    """Optimizer-state shardings: param rule + ZeRO-1 extension on m/v."""
+    def one(path, leaf):
+        ps = _path_str(path)
+        inner = re.sub(r"^(m|v)/", "", ps)
+        if ps.startswith(("m/", "v/")):
+            spec = param_spec(inner, leaf.shape, mesh, cfg)
+            spec = zero_extend(spec, leaf.shape, mesh)
+        else:
+            spec = P()  # step counter
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(one, opt_shapes)
+
+
+def batch_spec(shape, mesh) -> P:
+    """Shard the leading (batch) dim over the batch axes when divisible."""
+    axes = batch_axes(mesh)
+    n = int(np.prod([mesh.shape[a] for a in axes]))
+    if shape and shape[0] % n == 0 and shape[0] > 0:
+        lead = tuple(axes) if len(axes) > 1 else axes[0]
+        return P(lead, *([None] * (len(shape) - 1)))
+    return P(*([None] * len(shape)))
+
+
+def batch_shardings(batch_shapes, mesh):
+    return jax.tree.map(
+        lambda l: NamedSharding(mesh, batch_spec(l.shape, mesh)),
+        batch_shapes)
+
+
+def maybe(axis_or_axes, dim: int, mesh) -> object:
+    """Return the axis spec entry if ``dim`` divides its device count."""
+    axes = (axis_or_axes if isinstance(axis_or_axes, tuple)
+            else (axis_or_axes,))
+    n = int(np.prod([mesh.shape[a] for a in axes if a in mesh.axis_names]))
+    if all(a in mesh.axis_names for a in axes) and dim % n == 0 and dim > 0:
+        return axis_or_axes if isinstance(axis_or_axes, tuple) and \
+            len(axis_or_axes) > 1 else axes[0]
+    return None

@@ -1,0 +1,109 @@
+"""Input/state ShapeDtypeStruct stand-ins + their PartitionSpecs.
+
+``input_specs`` returns weak-type-correct, shardable ShapeDtypeStructs for
+every model input of an (arch x input-shape) combination — no device
+allocation, which is what lets the 512-chip dry-run run on one CPU.
+
+The decode-state specs mirror :func:`repro.models.model.init_decode_state`
+structure explicitly (no heuristics).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig, InputShape
+from ..models import layers, model, ssm
+from .mesh import batch_axes
+from .shardings import maybe
+
+
+def _batch_axis(mesh, b: int):
+    axes = batch_axes(mesh)
+    return maybe(tuple(axes) if len(axes) > 1 else axes[0], b, mesh)
+
+
+def decode_window(cfg: ArchConfig, shape: InputShape) -> int:
+    """Sliding window for the decode path (long_500k on quadratic archs)."""
+    if shape.name == "long_500k" and not cfg.is_recurrent:
+        return cfg.long_context_window
+    return cfg.sliding_window
+
+
+def cache_len(cfg: ArchConfig, shape: InputShape) -> int:
+    w = decode_window(cfg, shape)
+    return min(shape.seq_len, w) if w > 0 else shape.seq_len
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape) -> dict:
+    """ShapeDtypeStructs for the step function's data arguments."""
+    b = shape.global_batch
+    if shape.kind in ("train", "prefill"):
+        out = {"tokens": jax.ShapeDtypeStruct((b, shape.seq_len), jnp.int32)}
+        if cfg.family == "vlm":
+            out["patches"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_frontend_tokens, cfg.d_model), layers.COMPUTE_DTYPE)
+        if cfg.family == "audio":
+            out["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_frontend_tokens, cfg.d_model), layers.COMPUTE_DTYPE)
+        return out
+    # decode: one new token against a seq_len-sized cache/state
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((b,), jnp.int32)}
+
+
+def input_shardings(specs: dict, mesh) -> dict:
+    out = {}
+    for k, v in specs.items():
+        ba = _batch_axis(mesh, v.shape[0])
+        out[k] = NamedSharding(mesh, P(ba, *([None] * (len(v.shape) - 1))))
+    return out
+
+
+def decode_state_specs(cfg: ArchConfig, shape: InputShape):
+    """(ShapeDtypeStruct tree, NamedSharding-spec tree) for decode state."""
+    b = shape.global_batch
+    L = cache_len(cfg, shape)
+    state = jax.eval_shape(lambda: model.init_decode_state(cfg, b, L))
+    return state
+
+
+def decode_state_shardings(cfg: ArchConfig, shape: InputShape, mesh):
+    b = shape.global_batch
+    ba = _batch_axis(mesh, b)
+    mm = maybe("model", cfg.n_kv_heads, mesh)
+    # few-kv-head archs (MQA/GQA<16): shard the head_dim instead so the
+    # 32k cache still divides across the tensor-parallel axis
+    md = None if mm is not None else maybe("model", cfg.head_dim, mesh)
+
+    def kv_spec(rank):
+        # (layers?, B, L, Hkv, Dh)
+        lead = [None] * (rank - 4)
+        return P(*lead, ba, None, mm, md)
+
+    fam = cfg.family
+    if fam in ("dense", "vlm", "moe"):
+        return {"kv": {"k": NamedSharding(mesh, kv_spec(5)),
+                       "v": NamedSharding(mesh, kv_spec(5))}}
+    if fam == "ssm":
+        _, nh_m = ssm.mlstm_dims(cfg)
+        mh = maybe("model", cfg.n_heads, mesh)
+        sl = tuple(NamedSharding(mesh, P(None, ba, mh) if r == 3
+                                 else P(None, ba, mh, None))
+                   for r in (4, 4, 4, 3))
+        return {"mlstm": NamedSharding(mesh, P(None, None, ba, mh, None, None)),
+                "slstm": sl}
+    if fam == "hybrid":
+        _, nh = ssm.mamba2_dims(cfg)
+        mh = maybe("model", nh, mesh)
+        return {"mamba": NamedSharding(mesh, P(None, None, ba, mh, None, None)),
+                "kv": {"k": NamedSharding(mesh, kv_spec(5)),
+                       "v": NamedSharding(mesh, kv_spec(5))}}
+    if fam == "audio":
+        cross = NamedSharding(mesh, kv_spec(5))
+        return {"kv": {"k": NamedSharding(mesh, kv_spec(5)),
+                       "v": NamedSharding(mesh, kv_spec(5))},
+                "cross_k": cross, "cross_v": cross}
+    raise ValueError(fam)

@@ -1,0 +1,96 @@
+"""Jittable train / prefill / serve step factories.
+
+These close over the static ArchConfig and return functions whose
+arguments are pure pytrees of arrays — the objects the launcher jits,
+shards, lowers and (on the dry-run path) compiles without allocation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..models import model
+from ..optim import AdamWConfig, adamw_init, adamw_update
+
+
+def make_train_step(cfg, opt_cfg: AdamWConfig, *, window: int = 0,
+                    microbatches: int = 1, grad_shardings=None):
+    """Training step with optional gradient accumulation.
+
+    microbatches > 1 splits the global batch into that many sequential
+    microbatches (scanned, each rematerialised), dividing activation peak
+    memory — grads are accumulated in fp32 and the optimizer runs once.
+
+    grad_shardings: optional pytree of shardings to pin the accumulated
+    grads to (ZeRO-style reduce-scatter instead of per-microbatch
+    all-reduce; see EXPERIMENTS.md §Perf).
+    """
+    def grad_of(params, batch):
+        def lf(p):
+            return model.loss_fn(p, cfg, batch, window=window)
+        return jax.value_and_grad(lf, has_aux=True)(params)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, (xent, aux)), grads = grad_of(params, batch)
+        else:
+            mb = jax.tree.map(
+                lambda a: a.reshape(microbatches, a.shape[0] // microbatches,
+                                    *a.shape[1:]), batch)
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def acc(carry, b):
+                g, loss, xent, aux = carry
+                (l, (x, a)), gi = grad_of(params, b)
+                if grad_shardings is not None:
+                    gi = jax.tree.map(jax.lax.with_sharding_constraint,
+                                      gi, grad_shardings)
+                g = jax.tree.map(lambda u, v: u + v.astype(jnp.float32),
+                                 g, gi)
+                return (g, loss + l, xent + x, aux + a), None
+
+            carry = (g0, 0.0, 0.0, 0.0)
+            if cfg.scan_chunks:
+                carry, _ = jax.lax.scan(acc, carry, mb)
+            else:  # unrolled for dry-run cost measurement
+                for i in range(microbatches):
+                    carry, _ = acc(carry, jax.tree.map(lambda a: a[i], mb))
+            grads, loss, xent, aux = carry
+            grads = jax.tree.map(lambda gr: gr / microbatches, grads)
+            loss, xent, aux = (v / microbatches for v in (loss, xent, aux))
+        params, opt_state, gnorm = adamw_update(params, grads, opt_state,
+                                                opt_cfg)
+        metrics = {"loss": loss, "xent": xent, "aux": aux, "gnorm": gnorm}
+        return params, opt_state, metrics
+    return train_step
+
+
+def make_prefill_step(cfg, *, window: int = 0):
+    def prefill_step(params, batch):
+        logits, _ = model.forward(params, cfg, batch, window=window)
+        return logits
+    return prefill_step
+
+
+def make_serve_step(cfg, *, window: int = 0):
+    def serve_step(params, state, tokens, pos):
+        logits, state = model.decode_step(params, cfg, state, tokens, pos,
+                                          window=window)
+        return logits, state
+    return serve_step
+
+
+def init_train_state(cfg, key, opt_cfg: AdamWConfig):
+    params = model.init_params(cfg, key)
+    return params, adamw_init(params)
+
+
+def train_state_shapes(cfg, opt_cfg: AdamWConfig):
+    """ShapeDtypeStructs of (params, opt_state) — no allocation."""
+    def f():
+        return init_train_state(cfg, jax.random.PRNGKey(0), opt_cfg)
+    return jax.eval_shape(f)

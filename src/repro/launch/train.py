@@ -1,0 +1,108 @@
+"""Training launcher: real steps on the available devices.
+
+On CPU (tests/demo) this trains a REDUCED config; on a TPU slice the same
+entry point drives the full mesh.  The production 512-chip configuration
+is validated by dryrun.py (lower+compile only).
+
+Usage:
+  python -m repro.launch.train --arch glm4-9b --smoke --steps 20
+  python -m repro.launch.train --arch xlstm-125m --smoke --steps 50 \
+      --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from ..configs import ARCH_NAMES, get_config
+from ..data import TokenPipeline
+from ..models import model
+from ..optim import AdamWConfig, adamw_init
+from . import steps
+
+
+def make_batch_fn(cfg, batch: int, seq: int, seed: int = 0):
+    pipe = TokenPipeline(vocab_size=cfg.vocab_size, seq_len=seq,
+                         global_batch=batch, seed=seed)
+
+    def fn(step: int) -> dict:
+        b = dict(pipe.batch_at(step))
+        key = jax.random.fold_in(jax.random.PRNGKey(seed + 1), step)
+        if cfg.family == "vlm":
+            b["patches"] = jax.random.normal(
+                key, (batch, cfg.n_frontend_tokens, cfg.d_model),
+                jnp.bfloat16)
+        if cfg.family == "audio":
+            b["frames"] = jax.random.normal(
+                key, (batch, cfg.n_frontend_tokens, cfg.d_model),
+                jnp.bfloat16)
+        return b
+    return fn
+
+
+def train(arch: str, *, smoke: bool = True, steps_n: int = 20,
+          batch: int = 4, seq: int = 128, lr: float = 1e-3,
+          ckpt_dir: str | None = None, ckpt_every: int = 0,
+          microbatches: int = 1, log_every: int = 5) -> list[float]:
+    cfg = get_config(arch, smoke=smoke)
+    opt_cfg = AdamWConfig(lr=lr, warmup_steps=min(10, steps_n // 4),
+                          total_steps=steps_n)
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    start = 0
+    if ckpt_dir and (s := latest_step(ckpt_dir)) is not None:
+        import os
+        tgt = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+                           {"params": params, "opt": opt})
+        state = restore_checkpoint(
+            os.path.join(ckpt_dir, f"step_{s:08d}.npz"), tgt)
+        params, opt = state["params"], state["opt"]
+        start = s
+        print(f"[train] restored step {s} from {ckpt_dir}")
+
+    step_fn = jax.jit(steps.make_train_step(cfg, opt_cfg,
+                                            microbatches=microbatches))
+    batch_fn = make_batch_fn(cfg, batch, seq)
+    losses = []
+    t0 = time.time()
+    for i in range(start, steps_n):
+        params, opt, metrics = step_fn(params, opt, batch_fn(i))
+        losses.append(float(metrics["loss"]))
+        if i % log_every == 0 or i == steps_n - 1:
+            print(f"[train] {arch} step={i:4d} loss={losses[-1]:.4f} "
+                  f"gnorm={float(metrics['gnorm']):.3f} "
+                  f"({(time.time() - t0):.1f}s)", flush=True)
+        if ckpt_dir and ckpt_every and (i + 1) % ckpt_every == 0:
+            save_checkpoint(ckpt_dir, i + 1, {"params": params, "opt": opt})
+    return losses
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_NAMES)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    args = ap.parse_args()
+    losses = train(args.arch, smoke=args.smoke, steps_n=args.steps,
+                   batch=args.batch, seq=args.seq, lr=args.lr,
+                   ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                   microbatches=args.microbatches)
+    print(f"[train] done: first={losses[0]:.4f} last={losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Model substrate for the assigned architectures."""
+
+from . import attention, layers, model, moe, sharding, ssm
+
+__all__ = ["attention", "layers", "model", "moe", "sharding", "ssm"]

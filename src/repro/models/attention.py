@@ -1,0 +1,275 @@
+"""Attention substrate: GQA + RoPE + sliding window, three execution paths.
+
+* ``xla_chunked`` (default): flash-style online-softmax double scan over
+  query/key chunks in pure JAX — O(chunk^2) transient memory, identical
+  math to the Pallas kernel (kernels/flash_attention.py), runs on any
+  backend.  ``causal_skip=True`` switches the outer loop to a Python
+  unroll with *static* per-q-chunk kv extents, halving attention FLOPs
+  for causal masks (a §Perf optimization — see EXPERIMENTS.md).
+* ``xla_full``: naive einsum attention (testing / tiny shapes).
+* ``pallas``: the Pallas kernel, for real TPU runs.
+
+Layouts: activations (B, S, D); internally (B, Hkv, G, S, Dh) so grouped
+queries never materialise repeated K/V (important for MQA kv=1 archs).
+Decode keeps a (B, S_cache, Hkv, Dh) cache (ring-buffer for sliding
+window) and writes the new token at a traced position.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .sharding import constrain
+from ..kernels import ops as kernel_ops
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg, cross: bool = False):
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": layers.init_linear(ks[0], d, hq * dh, bias=cfg.qkv_bias),
+        "wk": layers.init_linear(ks[1], d, hkv * dh, bias=cfg.qkv_bias),
+        "wv": layers.init_linear(ks[2], d, hkv * dh, bias=cfg.qkv_bias),
+        "wo": layers.init_linear(ks[3], hq * dh, d),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = layers.init_rmsnorm(dh)
+        p["k_norm"] = layers.init_rmsnorm(dh)
+    return p
+
+
+def _project_qkv(p, cfg, x, kv_x=None):
+    """-> q (B,Sq,Hq,Dh), k/v (B,Sk,Hkv,Dh)."""
+    b, sq, _ = x.shape
+    kv_x = x if kv_x is None else kv_x
+    sk = kv_x.shape[1]
+    q = layers.linear(p["wq"], x).reshape(b, sq, cfg.n_heads, cfg.head_dim)
+    k = layers.linear(p["wk"], kv_x).reshape(b, sk, cfg.n_kv_heads, cfg.head_dim)
+    v = layers.linear(p["wv"], kv_x).reshape(b, sk, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = layers.rmsnorm(p["q_norm"], q)
+        k = layers.rmsnorm(p["k_norm"], k)
+    return q, k, v
+
+
+def _grouped(q, k, v, hkv):
+    """(B,S,H,D) -> q (B,Hkv,G,Sq,D), k/v (B,Hkv,Sk,D)."""
+    b, sq, hq, d = q.shape
+    g = hq // hkv
+    q = q.transpose(0, 2, 1, 3).reshape(b, hkv, g, sq, d)
+    k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+    return q, k, v
+
+
+def _chunk_attn_block(q, k, v, qpos0, kpos0, *, causal, window, scale):
+    """One (q-chunk x kv-chunk) flash block. q (B,Hkv,G,cq,D), k/v (B,Hkv,ck,D).
+
+    Returns (scores_exp, m, l, pv) pieces via the caller-held running state.
+    """
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    cq, ck = q.shape[3], k.shape[2]
+    qpos = qpos0 + jax.lax.broadcasted_iota(jnp.int32, (cq, ck), 0)
+    kpos = kpos0 + jax.lax.broadcasted_iota(jnp.int32, (cq, ck), 1)
+    mask = jnp.ones((cq, ck), jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    return jnp.where(mask, s, NEG_INF)
+
+
+def _pick_chunk(s: int, chunk: int) -> int:
+    """Largest divisor of s that is <= chunk (VLM prepends patch tokens, so
+    sequence lengths are not always powers of two)."""
+    for c in range(min(chunk, s), 0, -1):
+        if s % c == 0:
+            return c
+    return s
+
+
+def _flash_xla(q, k, v, *, causal: bool, window: int, chunk: int,
+               q_offset: int = 0, causal_skip: bool = False,
+               scan_chunks: bool = True):
+    """Flash-style attention, pure JAX.  q (B,Hkv,G,Sq,D), k/v (B,Hkv,Sk,D)."""
+    b, hkv, g, sq, d = q.shape
+    sk = k.shape[2]
+    scale = 1.0 / (d ** 0.5)
+    cq = _pick_chunk(sq, chunk)
+    ck = _pick_chunk(sk, chunk)
+    nq, nk = sq // cq, sk // ck
+
+    def q_chunk_body(qi, qc, nk_eff):
+        """Online softmax over kv chunks for one q chunk. qc (B,Hkv,G,cq,D)."""
+        m0 = jnp.full((b, hkv, g, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, cq), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, cq, d), jnp.float32)
+
+        # rematerialised backward: without the checkpoints, scan VJP stacks
+        # every block's probabilities — the full S x S matrix, which is
+        # exactly what flash attention exists to avoid
+        @jax.checkpoint
+        def kv_body(carry, ki):
+            m, l, acc = carry
+            kc = jax.lax.dynamic_slice_in_dim(k, ki * ck, ck, axis=2)
+            vc = jax.lax.dynamic_slice_in_dim(v, ki * ck, ck, axis=2)
+            s = _chunk_attn_block(qc, kc, vc, q_offset + qi * cq, ki * ck,
+                                  causal=causal, window=window, scale=scale)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p, vc.astype(jnp.float32))
+            return (m_new, l, acc), None
+
+        if scan_chunks:
+            (m, l, acc), _ = jax.lax.scan(kv_body, (m0, l0, a0),
+                                          jnp.arange(nk_eff))
+        else:
+            carry = (m0, l0, a0)
+            for ki in range(nk_eff):
+                carry, _ = kv_body(carry, jnp.int32(ki))
+            m, l, acc = carry
+        safe = jnp.where(l == 0.0, 1.0, l)
+        return (acc / safe[..., None]).astype(q.dtype)
+
+    skip_ok = causal_skip and causal and q_offset == 0 and window == 0
+    if skip_ok or not scan_chunks:
+        # Python outer loop over q chunks.  With causal_skip the per-chunk
+        # kv extent is STATIC — only the lower triangle of kv blocks is
+        # ever computed (~2x fewer attention FLOPs, a §Perf optimization).
+        # With scan_chunks=False (cost measurement) the extent stays FULL
+        # so flops match the scanned baseline exactly.
+        outs = []
+        for qi in range(nq):
+            qc = jax.lax.slice_in_dim(q, qi * cq, (qi + 1) * cq, axis=3)
+            nk_eff = (qi * cq + cq + ck - 1) // ck if skip_ok else nk
+            outs.append(q_chunk_body(qi, qc, nk_eff))
+        out = jnp.concatenate(outs, axis=3)
+    else:
+        qr = q.reshape(b, hkv, g, nq, cq, d).transpose(3, 0, 1, 2, 4, 5)
+
+        @jax.checkpoint
+        def outer(_, qi_qc):
+            qi, qc = qi_qc
+            return None, q_chunk_body(qi, qc, nk)
+
+        _, out = jax.lax.scan(outer, None, (jnp.arange(nq), qr))
+        out = out.transpose(1, 2, 3, 0, 4, 5).reshape(b, hkv, g, sq, d)
+    return out
+
+
+def attention(p, cfg, x, positions, *, causal=True, window=0, kv_x=None,
+              kv_positions=None, use_rope=True):
+    """Full-sequence attention (train / prefill / encoder / cross).
+
+    Args:
+      x: (B, Sq, D) queries' activations.
+      positions: (B, Sq) int positions (for RoPE + causal mask offset).
+      kv_x: optional (B, Sk, D) for cross-attention.
+
+    Returns: (B, Sq, D).
+    """
+    b, sq, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x, kv_x)
+    if use_rope:
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        kp = positions if kv_positions is None else kv_positions
+        k = layers.apply_rope(k, kp, cfg.rope_theta)
+
+    if cfg.attn_impl == "pallas":
+        qh = q.transpose(0, 2, 1, 3)
+        kh = k.transpose(0, 2, 1, 3)
+        vh = v.transpose(0, 2, 1, 3)
+        out = kernel_ops.flash_attention(qh, kh, vh, causal=causal,
+                                         window=window)
+        out = out.transpose(0, 2, 1, 3)
+    elif cfg.attn_impl == "xla_full" or sq * k.shape[1] <= 512 * 512:
+        qg, kg, vg = _grouped(q, k, v, cfg.n_kv_heads)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
+                       kg.astype(jnp.float32)) / (cfg.head_dim ** 0.5)
+        qpos = positions[:, None, None, :, None]
+        kpos = (kv_positions if kv_positions is not None
+                else positions)[:, None, None, None, :]
+        mask = jnp.ones_like(s, dtype=bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window > 0:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+        pr = jax.nn.softmax(s, axis=-1)
+        og = jnp.einsum("bhgqk,bhkd->bhgqd", pr, vg.astype(jnp.float32))
+        out = og.reshape(b, cfg.n_heads, sq, cfg.head_dim).transpose(0, 2, 1, 3)
+        out = out.astype(x.dtype)
+    else:
+        qg, kg, vg = _grouped(q, k, v, cfg.n_kv_heads)
+        og = _flash_xla(qg, kg, vg, causal=causal, window=window,
+                        chunk=cfg.attn_chunk, causal_skip=cfg.causal_skip,
+                        scan_chunks=cfg.scan_chunks)
+        out = og.reshape(b, cfg.n_heads, sq, cfg.head_dim).transpose(0, 2, 1, 3)
+
+    out = constrain(out, "batch", "seq", "heads", None)
+    out = out.reshape(b, sq, cfg.n_heads * cfg.head_dim)
+    return layers.linear(p["wo"], out)
+
+
+def init_kv_cache(cfg, batch: int, length: int, dtype=layers.COMPUTE_DTYPE):
+    shape = (batch, length, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def attention_decode(p, cfg, x, cache, pos, *, window=0, use_rope=True):
+    """Single-token decode against a KV cache.
+
+    Args:
+      x: (B, 1, D) current-token activations.
+      cache: {'k','v'}: (B, L, Hkv, Dh).  For sliding-window serving, L is
+        the window (ring buffer); otherwise L = max seq.
+      pos: (B,) int32 absolute position of the new token.
+
+    Returns: (out (B,1,D), new_cache).
+    """
+    b = x.shape[0]
+    L = cache["k"].shape[1]
+    q, k, v = _project_qkv(p, cfg, x)
+    if use_rope:
+        q = layers.apply_rope(q, pos[:, None], cfg.rope_theta)
+        k = layers.apply_rope(k, pos[:, None], cfg.rope_theta)
+
+    slot = (pos % L) if window > 0 else jnp.minimum(pos, L - 1)
+
+    def upd(c, new):
+        return jax.vmap(
+            lambda cb, nb, s: jax.lax.dynamic_update_slice_in_dim(cb, nb, s, 0)
+        )(c, new.astype(c.dtype), slot)
+
+    cache = {"k": upd(cache["k"], k), "v": upd(cache["v"], v)}
+
+    kg = cache["k"].transpose(0, 2, 1, 3)           # (B,Hkv,L,D)
+    vg = cache["v"].transpose(0, 2, 1, 3)
+    g = cfg.n_heads // cfg.n_kv_heads
+    qg = q.transpose(0, 2, 1, 3).reshape(b, cfg.n_kv_heads, g, 1,
+                                         cfg.head_dim)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
+                   kg.astype(jnp.float32)) / (cfg.head_dim ** 0.5)
+    # valid cache entries: absolute positions <= pos and (window) in range
+    idx = jnp.arange(L)[None, :]                     # slots
+    if window > 0:
+        # ring buffer: every slot holds one of the last L tokens
+        valid = idx < jnp.minimum(pos[:, None] + 1, L)
+    else:
+        valid = idx <= pos[:, None]
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    og = jnp.einsum("bhgqk,bhkd->bhgqd", pr, vg.astype(jnp.float32))
+    out = og.reshape(b, cfg.n_heads, 1, cfg.head_dim).transpose(0, 2, 1, 3)
+    out = out.reshape(b, 1, cfg.n_heads * cfg.head_dim).astype(x.dtype)
+    return layers.linear(p["wo"], out), cache

@@ -1,0 +1,166 @@
+"""Shared neural layers: norms, MLPs, embeddings, RoPE, losses.
+
+Functional style: ``init_*`` returns a params dict; ``apply`` functions are
+pure.  Params are stored fp32; matmuls run in ``compute_dtype`` (bf16 on
+TPU) with fp32 accumulation where it matters.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .sharding import constrain
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def _dense_init(key, shape, scale=None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# linear / embedding
+# ---------------------------------------------------------------------------
+
+def init_linear(key, d_in: int, d_out: int, bias: bool = False):
+    p = {"w": _dense_init(key, (d_in, d_out))}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def linear(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def init_embedding(key, vocab: int, d: int):
+    # 0.02 (GPT-2 style) keeps tied-unembedding logits O(1) at init
+    return {"table": _dense_init(key, (vocab, d), scale=0.02)}
+
+
+def embed(p, tokens, dtype=COMPUTE_DTYPE):
+    return p["table"].astype(dtype)[tokens]
+
+
+def unembed(p, x):
+    """Logits against the (possibly tied) embedding table."""
+    return x @ p["table"].astype(x.dtype).T
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, mlp_type: str):
+    ks = jax.random.split(key, 3)
+    if mlp_type == "swiglu":
+        return {"wi": _dense_init(ks[0], (d_model, d_ff)),
+                "wg": _dense_init(ks[1], (d_model, d_ff)),
+                "wo": _dense_init(ks[2], (d_ff, d_model))}
+    if mlp_type == "gelu":
+        return {"wi": _dense_init(ks[0], (d_model, d_ff)),
+                "wo": _dense_init(ks[2], (d_ff, d_model))}
+    raise ValueError(mlp_type)
+
+
+def mlp(p, x, mlp_type: str):
+    h = x @ p["wi"].astype(x.dtype)
+    if mlp_type == "swiglu":
+        h = jax.nn.silu(h) * (x @ p["wg"].astype(x.dtype))
+    else:
+        h = jax.nn.gelu(h)
+    h = constrain(h, *(("batch", "seq", "ff") if h.ndim == 3
+                       else ("batch", "ff")))
+    return h @ p["wo"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float):
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                                # (d/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * inv   # (..., seq, d/2)
+    cos = jnp.cos(ang)[..., None, :]                          # (..., seq, 1, d/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def softmax_xent(logits: jax.Array, labels: jax.Array,
+                 mask: jax.Array | None = None) -> jax.Array:
+    """Mean token cross-entropy; logits (..., V) fp32-accumulated."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def softmax_xent_chunked(table: jax.Array, x: jax.Array, labels: jax.Array,
+                         chunk: int = 256,
+                         scan_chunks: bool = True) -> jax.Array:
+    """Cross-entropy against a tied embedding table WITHOUT materialising
+    the full (B, S, V) logits: scan over seq chunks, rematerialising each
+    chunk's logits in the backward pass.  Peak logits memory drops from
+    S/chunk x to one chunk (the V=150k vocabularies otherwise dominate the
+    training step's temp memory).
+    """
+    b, s, d = x.shape
+    c = chunk
+    while s % c:
+        c -= 1
+    nc = s // c
+    xs = jnp.moveaxis(x.reshape(b, nc, c, d), 1, 0)          # (nc,B,c,D)
+    ls = jnp.moveaxis(labels.reshape(b, nc, c), 1, 0)        # (nc,B,c)
+
+    @jax.checkpoint
+    def body(acc, inp):
+        xc, lc = inp
+        logits = (xc @ table.astype(xc.dtype).T).astype(jnp.float32)
+        logits = constrain(logits, "batch", None, "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, lc[..., None], -1)[..., 0]
+        return acc + jnp.sum(lse - ll), None
+
+    if scan_chunks:
+        total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xs, ls))
+    else:
+        total = jnp.zeros((), jnp.float32)
+        for i in range(nc):
+            total, _ = body(total, (xs[i], ls[i]))
+    return total / (b * s)

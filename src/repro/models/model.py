@@ -1,0 +1,428 @@
+"""Model assembly: init / train forward / prefill / decode for all families.
+
+Families and their layer stacks:
+
+  dense | vlm      uniform [attn + MLP] decoder layers     -> one lax.scan
+  moe              uniform [attn + MoE] decoder layers     -> one lax.scan
+  ssm (xlstm)      groups of (slstm_every-1) mLSTM + 1 sLSTM -> scan of scans
+  hybrid (zamba2)  groups of [shared attn+MLP] + attn_every Mamba2
+                   (attention params SHARED across groups — the Zamba trick)
+  audio (whisper)  enc-dec: bidirectional encoder over stub frame
+                   embeddings, causal decoder with cross-attention
+
+Layer parameters are stacked on a leading axis and consumed by lax.scan —
+this keeps HLO size O(1) in depth (critical for the 88-layer configs) and
+is also what makes the pjit sharding rules uniform.  ``jax.checkpoint``
+(remat) wraps each scanned block when cfg.remat.
+
+Decode ("serve_step") processes ONE new token against a KV cache /
+recurrent state, matching the decode_32k / long_500k dry-run shapes.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_lib
+from . import layers, moe as moe_lib, ssm as ssm_lib
+from .sharding import constrain
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_decoder_layer(key, cfg, is_moe: bool):
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln1": layers.init_rmsnorm(cfg.d_model),
+        "attn": attn_lib.init_attention(ks[0], cfg),
+        "ln2": layers.init_rmsnorm(cfg.d_model),
+    }
+    if is_moe:
+        p["moe"] = moe_lib.init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = layers.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_type)
+    return p
+
+
+def _stack(key, n, fn):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def init_params(cfg, key) -> Params:
+    ks = jax.random.split(key, 8)
+    p: dict = {"embed": layers.init_embedding(ks[0], cfg.vocab_size,
+                                              cfg.d_model),
+               "ln_f": layers.init_rmsnorm(cfg.d_model)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = layers.init_linear(ks[7], cfg.d_model, cfg.vocab_size)
+
+    fam = cfg.family
+    if fam in ("dense", "vlm", "moe"):
+        p["layers"] = _stack(
+            ks[1], cfg.n_layers,
+            lambda k: _init_decoder_layer(k, cfg, fam == "moe"))
+        if fam == "vlm":
+            p["patch_proj"] = layers.init_linear(ks[2], cfg.d_model,
+                                                 cfg.d_model)
+    elif fam == "ssm":
+        n_grp = cfg.n_layers // cfg.slstm_every
+        n_ml = cfg.slstm_every - 1
+        p["mlstm"] = _stack(
+            ks[1], n_grp,
+            lambda k: jax.vmap(lambda k2: ssm_lib.init_mlstm(k2, cfg))(
+                jax.random.split(k, n_ml)))
+        p["slstm"] = _stack(ks[2], n_grp,
+                            lambda k: ssm_lib.init_slstm(k, cfg))
+    elif fam == "hybrid":
+        n_grp = cfg.n_layers // cfg.attn_every
+        p["mamba"] = _stack(
+            ks[1], n_grp,
+            lambda k: jax.vmap(lambda k2: ssm_lib.init_mamba2(k2, cfg))(
+                jax.random.split(k, cfg.attn_every)))
+        # ONE shared attention+MLP block (Zamba)
+        p["shared_attn"] = _init_decoder_layer(ks[2], cfg, False)
+    elif fam == "audio":
+        p["enc_layers"] = _stack(
+            ks[1], cfg.n_encoder_layers,
+            lambda k: _init_decoder_layer(k, cfg, False))
+        p["dec_layers"] = _stack(
+            ks[2], cfg.n_layers,
+            lambda k: _init_decoder_layer(k, cfg, False))
+        p["cross_layers"] = _stack(
+            ks[3], cfg.n_layers,
+            lambda k: {"ln": layers.init_rmsnorm(cfg.d_model),
+                       "attn": attn_lib.init_attention(k, cfg, cross=True)})
+        p["ln_enc"] = layers.init_rmsnorm(cfg.d_model)
+        p["frame_proj"] = layers.init_linear(ks[4], cfg.d_model, cfg.d_model)
+    else:
+        raise ValueError(fam)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _decoder_block(lp, cfg, x, positions, *, window=0, is_moe=False,
+                   causal=True):
+    h = attn_lib.attention(lp["attn"], cfg, layers.rmsnorm(lp["ln1"], x),
+                           positions, causal=causal, window=window)
+    x = x + h
+    x = constrain(x, "batch", "seq", "embed")
+    aux = jnp.zeros((), jnp.float32)
+    z = layers.rmsnorm(lp["ln2"], x)
+    if is_moe:
+        y, aux = moe_lib.moe_layer(lp["moe"], cfg, z)
+    else:
+        y = layers.mlp(lp["mlp"], z, cfg.mlp_type)
+    x = x + y
+    return constrain(x, "batch", "seq", "embed"), aux
+
+
+def _maybe_remat(fn, cfg):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def _scan(cfg, body, carry, xs):
+    """lax.scan over stacked layer params, or a Python unroll when
+    cfg.scan_layers=False (dry-run cost measurement; see configs/base)."""
+    if cfg.scan_layers:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        carry, y = body(carry, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill, full sequence)
+# ---------------------------------------------------------------------------
+
+def _backbone(params, cfg, x, positions, *, window=0):
+    """Full-sequence pass through the layer stack. x (B,S,D)."""
+    fam = cfg.family
+    aux0 = jnp.zeros((), jnp.float32)
+
+    if fam in ("dense", "vlm", "moe"):
+        def body(carry, lp):
+            x, aux = carry
+            x, a = _decoder_block(lp, cfg, x, positions, window=window,
+                                  is_moe=(fam == "moe"))
+            return (x, aux + a), None
+        (x, aux), _ = _scan(cfg, _maybe_remat(body, cfg), (x, aux0),
+                                   params["layers"])
+        return x, aux
+
+    if fam == "ssm":
+        def group(carry, lps):
+            x, aux = carry
+            ml_stack, sl = lps
+
+            def ml_body(xc, lp):
+                y, _ = ssm_lib.mlstm_layer(lp, cfg, xc)
+                return xc + y, None
+            x, _ = _scan(cfg, _maybe_remat(ml_body, cfg), x, ml_stack)
+            y, _ = ssm_lib.slstm_layer(sl, cfg, x)
+            return (x + y, aux), None
+        (x, aux), _ = _scan(cfg, group, (x, aux0),
+                                   (params["mlstm"], params["slstm"]))
+        return x, aux
+
+    if fam == "hybrid":
+        shared = params["shared_attn"]
+
+        def group(carry, mstack):
+            x, aux = carry
+            x, _ = _decoder_block(shared, cfg, x, positions, window=window)
+
+            def m_body(xc, lp):
+                y, _ = ssm_lib.mamba2_layer(lp, cfg, xc)
+                return xc + y, None
+            x, _ = _scan(cfg, _maybe_remat(m_body, cfg), x, mstack)
+            return (x, aux), None
+        (x, aux), _ = _scan(cfg, group, (x, aux0), params["mamba"])
+        return x, aux
+
+    raise ValueError(fam)
+
+
+def _sinusoidal(n, d):
+    pos = jnp.arange(n)[:, None].astype(jnp.float32)
+    i = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    ang = pos / jnp.power(10_000.0, 2 * i / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)
+
+
+def _encode_audio(params, cfg, frames):
+    """frames: (B, F, D) stub embeddings -> encoder output (B, F, D)."""
+    x = layers.linear(params["frame_proj"],
+                      frames.astype(layers.COMPUTE_DTYPE))
+    x = x + _sinusoidal(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+    pos = jnp.broadcast_to(jnp.arange(x.shape[1])[None], x.shape[:2])
+
+    def body(carry, lp):
+        x, = carry
+        x, _ = _decoder_block(lp, cfg, x, pos, causal=False)
+        return (x,), None
+    (x,), _ = _scan(cfg, _maybe_remat(body, cfg), (x,),
+                           params["enc_layers"])
+    return layers.rmsnorm(params["ln_enc"], x)
+
+
+def _decode_audio_full(params, cfg, x, positions, enc_out):
+    enc_pos = jnp.broadcast_to(jnp.arange(enc_out.shape[1])[None],
+                               enc_out.shape[:2])
+
+    def body(carry, lps):
+        x, = carry
+        lp, cp = lps
+        x, _ = _decoder_block(lp, cfg, x, positions)
+        h = attn_lib.attention(cp["attn"], cfg,
+                               layers.rmsnorm(cp["ln"], x), positions,
+                               causal=False, kv_x=enc_out,
+                               kv_positions=enc_pos, use_rope=False)
+        return (x + h,), None
+    (x,), _ = _scan(cfg, _maybe_remat(body, cfg), (x,),
+                           (params["dec_layers"], params["cross_layers"]))
+    return x
+
+
+def hidden(params, cfg, batch, *, window=0):
+    """Final hidden states (after ln_f, frontend tokens trimmed).
+
+    Returns (x (B, S, D), aux_loss).
+    """
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = layers.embed(params["embed"], tokens)
+    x = constrain(x, "batch", "seq", "embed")
+    n_front = 0
+
+    if cfg.family == "vlm":
+        patches = layers.linear(params["patch_proj"],
+                                batch["patches"].astype(x.dtype))
+        x = jnp.concatenate([patches, x], axis=1)
+        n_front = patches.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None],
+                                 (b, x.shape[1]))
+
+    if cfg.family == "audio":
+        enc_out = _encode_audio(params, cfg, batch["frames"])
+        x = _decode_audio_full(params, cfg, x, positions, enc_out)
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        x, aux = _backbone(params, cfg, x, positions, window=window)
+
+    x = layers.rmsnorm(params["ln_f"], x)
+    if n_front:
+        x = x[:, n_front:]
+    return x, aux
+
+
+def forward(params, cfg, batch, *, window=0):
+    """Full-sequence forward.  batch keys: tokens (B,S) [+ patches/frames].
+
+    Returns (logits (B,S,V), aux_loss).
+    """
+    x, aux = hidden(params, cfg, batch, window=window)
+    logits = layers.unembed(params["embed"], x) if cfg.tie_embeddings \
+        else layers.linear(params["unembed"], x)
+    logits = constrain(logits, "batch", "seq", "vocab")
+    return logits, aux
+
+
+def loss_fn(params, cfg, batch, *, window=0):
+    x, aux = hidden(params, cfg, batch, window=window)
+    if cfg.tie_embeddings:
+        # chunked loss: never materialises the (B,S,V) logits
+        loss = layers.softmax_xent_chunked(
+            params["embed"]["table"], x[:, :-1], batch["tokens"][:, 1:],
+            scan_chunks=cfg.scan_chunks)
+    else:
+        logits = layers.linear(params["unembed"], x)
+        loss = layers.softmax_xent(logits[:, :-1], batch["tokens"][:, 1:])
+    return loss + aux, (loss, aux)
+
+
+# ---------------------------------------------------------------------------
+# decode (serve_step)
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg, batch: int, cache_len: int):
+    """Decode-state pytree (zeros; dryrun uses eval_shape on this)."""
+    fam = cfg.family
+    if fam in ("dense", "vlm", "moe"):
+        return {"kv": jax.vmap(lambda _: attn_lib.init_kv_cache(
+            cfg, batch, cache_len))(jnp.arange(cfg.n_layers))}
+    if fam == "ssm":
+        n_grp = cfg.n_layers // cfg.slstm_every
+        n_ml = cfg.slstm_every - 1
+        ml = jnp.zeros((n_grp, n_ml, *ssm_lib.mlstm_state_shape(cfg, batch)),
+                       jnp.float32)
+        sl = tuple(jnp.broadcast_to(a[None], (n_grp, *a.shape))
+                   for a in ssm_lib.slstm_init_state(cfg, batch))
+        return {"mlstm": ml, "slstm": sl}
+    if fam == "hybrid":
+        n_grp = cfg.n_layers // cfg.attn_every
+        mb = jnp.zeros((n_grp, cfg.attn_every,
+                        *ssm_lib.mamba2_state_shape(cfg, batch)), jnp.float32)
+        kv = attn_lib.init_kv_cache(cfg, batch, cache_len)
+        kv = {k: jnp.broadcast_to(v[None], (n_grp, *v.shape))
+              for k, v in kv.items()}
+        return {"mamba": mb, "kv": kv}
+    if fam == "audio":
+        kv = jax.vmap(lambda _: attn_lib.init_kv_cache(cfg, batch, cache_len))(
+            jnp.arange(cfg.n_layers))
+        # cross-attention K/V precomputed at prefill; static during decode
+        ck = jnp.zeros((cfg.n_layers, batch, cfg.n_frontend_tokens,
+                        cfg.n_kv_heads, cfg.head_dim), layers.COMPUTE_DTYPE)
+        return {"kv": kv, "cross_k": ck, "cross_v": ck}
+    raise ValueError(fam)
+
+
+def _decode_block(lp, cfg, x, st, pos, window):
+    h, st_kv = attn_lib.attention_decode(
+        lp["attn"], cfg, layers.rmsnorm(lp["ln1"], x), st, pos,
+        window=window)
+    x = x + h
+    z = layers.rmsnorm(lp["ln2"], x)
+    if "moe" in lp:
+        y, _ = moe_lib.moe_layer(lp["moe"], cfg, z)
+    else:
+        y = layers.mlp(lp["mlp"], z, cfg.mlp_type)
+    return x + y, st_kv
+
+
+def decode_step(params, cfg, state, tokens, pos, *, window=0):
+    """One decode step.  tokens (B,1) int32; pos (B,) absolute position.
+
+    Returns (logits (B,1,V), new state).
+    """
+    fam = cfg.family
+    x = layers.embed(params["embed"], tokens)
+
+    if fam in ("dense", "vlm", "moe"):
+        def body(x, lps):
+            lp, st = lps
+            x, st = _decode_block(lp, cfg, x, st, pos, window)
+            return x, st
+        x, kv = _scan(cfg, body, x, (params["layers"], state["kv"]))
+        state = {"kv": kv}
+    elif fam == "ssm":
+        def group(x, lps):
+            lp_ml, st_ml, lp_sl, st_sl = lps
+
+            def ml_body(x, a):
+                lp, st = a
+                y, st = ssm_lib.mlstm_step(lp, cfg, x, st)
+                return x + y, st
+            x, st_ml = _scan(cfg, ml_body, x, (lp_ml, st_ml))
+            y, st_sl = ssm_lib.slstm_step(lp_sl, cfg, x, st_sl)
+            return x + y, (st_ml, st_sl)
+        x, (ml, sl) = _scan(cfg, 
+            group, x, (params["mlstm"], state["mlstm"],
+                       params["slstm"], state["slstm"]))
+        state = {"mlstm": ml, "slstm": sl}
+    elif fam == "hybrid":
+        shared = params["shared_attn"]
+
+        def group(x, lps):
+            mstack, st_m, st_kv = lps
+            x, st_kv = _decode_block(shared, cfg, x, st_kv, pos, window)
+
+            def m_body(x, a):
+                lp, st = a
+                y, st = ssm_lib.mamba2_step(lp, cfg, x, st)
+                return x + y, st
+            x, st_m = _scan(cfg, m_body, x, (mstack, st_m))
+            return x, (st_m, st_kv)
+        x, (mb, kv) = _scan(cfg, 
+            group, x, (params["mamba"], state["mamba"], state["kv"]))
+        state = {"mamba": mb, "kv": kv}
+    elif fam == "audio":
+        def body(x, lps):
+            lp, cp, st, ck, cv = lps
+            x, st = _decode_block(lp, cfg, x, st, pos, window)
+            # cross attention against cached encoder K/V
+            b = x.shape[0]
+            zq = layers.rmsnorm(cp["ln"], x)
+            q = layers.linear(cp["attn"]["wq"], zq).reshape(
+                b, 1, cfg.n_heads, cfg.head_dim)
+            g = cfg.n_heads // cfg.n_kv_heads
+            qg = q.transpose(0, 2, 1, 3).reshape(b, cfg.n_kv_heads, g, 1,
+                                                 cfg.head_dim)
+            kg = ck.transpose(0, 2, 1, 3)
+            vg = cv.transpose(0, 2, 1, 3)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
+                           kg.astype(jnp.float32)) / (cfg.head_dim ** 0.5)
+            pr = jax.nn.softmax(s, axis=-1)
+            og = jnp.einsum("bhgqk,bhkd->bhgqd", pr, vg.astype(jnp.float32))
+            o = og.reshape(b, cfg.n_heads, 1, cfg.head_dim).transpose(
+                0, 2, 1, 3).reshape(b, 1, -1).astype(x.dtype)
+            x = x + layers.linear(cp["attn"]["wo"], o)
+            return x, (st, ck, cv)
+        x, (kv, ck, cv) = _scan(cfg, 
+            body, x, (params["dec_layers"], params["cross_layers"],
+                      state["kv"], state["cross_k"], state["cross_v"]))
+        state = {"kv": kv, "cross_k": ck, "cross_v": cv}
+    else:
+        raise ValueError(fam)
+
+    x = layers.rmsnorm(params["ln_f"], x)
+    logits = layers.unembed(params["embed"], x) if cfg.tie_embeddings \
+        else layers.linear(params["unembed"], x)
+    return logits, state

@@ -1,0 +1,87 @@
+"""Logical-axis sharding constraints for model activations.
+
+Models annotate activations with *logical* axes ('batch', 'seq', 'embed',
+'heads', 'ff', 'vocab', 'experts', ...).  The launcher installs a mapping
+from logical axes to mesh axes for the current mesh (single-pod vs
+multi-pod differ only in the 'batch' mapping); on CPU/test runs with no
+mapping installed, constraints are no-ops, so the same model code runs
+everywhere.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+# Default logical->mesh mapping used by the production launcher.
+SINGLE_POD_RULES = {
+    "batch": ("data",),
+    "seq": None,
+    "embed": None,
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "ff": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "expert_cap": None,
+    "state": None,
+}
+
+MULTI_POD_RULES = dict(SINGLE_POD_RULES, batch=("pod", "data"))
+
+
+def rules_for_mesh(mesh, seq_shard: bool = False) -> dict:
+    """seq_shard=True turns on Megatron-style sequence parallelism: the
+    residual stream (and everything constrained on 'seq') is sharded over
+    the tensor-parallel axis between blocks, dividing saved remat
+    activations by the model-axis size at the cost of gather/scatter
+    collectives around attention/MLP."""
+    rules = MULTI_POD_RULES if "pod" in mesh.axis_names else SINGLE_POD_RULES
+    if seq_shard:
+        rules = dict(rules, seq=("model",))
+    return rules
+
+
+@contextlib.contextmanager
+def logical_rules(rules: dict | None):
+    """Install a logical->mesh mapping for the enclosed trace."""
+    prev = getattr(_state, "rules", None)
+    _state.rules = rules
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def spec(*logical_axes) -> P:
+    """PartitionSpec for the given logical axes under the current rules."""
+    rules = getattr(_state, "rules", None)
+    if rules is None:
+        return P()
+    out = []
+    used: set = set()
+    for ax in logical_axes:
+        m = rules.get(ax) if ax is not None else None
+        if m is None or any(a in used for a in m):
+            # a mesh axis may appear once per spec — later logical axes
+            # that would reuse one (e.g. vocab when seq already holds
+            # 'model' under sequence parallelism) fall back to replicated
+            out.append(None)
+            continue
+        used.update(m)
+        out.append(m[0] if len(m) == 1 else tuple(m))
+    return P(*out)
+
+
+def constrain(x: jax.Array, *logical_axes) -> jax.Array:
+    """with_sharding_constraint against the current logical rules (no-op
+    when no rules are installed, e.g. CPU unit tests)."""
+    rules = getattr(_state, "rules", None)
+    if rules is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec(*logical_axes))

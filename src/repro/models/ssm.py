@@ -1,0 +1,366 @@
+"""State-space / recurrent blocks: Mamba2 (SSD), mLSTM, sLSTM.
+
+Mamba2 and mLSTM share one computational core, *chunked decay attention*:
+
+    S_t = exp(ld_t) * S_{t-1} + k_t v_t^T          (state (N, P) per head)
+    y_t = q_t @ S_t
+
+computed chunk-parallel (Mamba2's SSD block decomposition): a quadratic
+masked intra-chunk part that maps onto the MXU, plus an inter-chunk scan
+carrying S.  Mapping:
+
+  Mamba2:  q=C, k=B, v=dt*x, ld = a*dt  (a = -exp(A_log) < 0)
+  mLSTM :  q=q/sqrt(dk), k=i_t*k_t, v=[v, 1], ld = logsigmoid(f_logit);
+           the appended ones-column makes the normalizer n_t ride along in
+           the same state, y = num / max(|den|, 1)  (xLSTM eq. 21-24;
+           sigmoid input gate per the mLSTM-sig variant — DESIGN.md).
+
+sLSTM is inherently sequential (scalar gates with recurrent h feedback) —
+lax.scan over time with the exp-gate stabilizer m_t (xLSTM eq. 15-17).
+
+Simplifications vs the releases (noted in DESIGN.md): no causal conv1d
+frontends, ngroups=1 for B/C, no per-invocation LoRA on shared blocks.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# shared core: chunked decay attention
+# ---------------------------------------------------------------------------
+
+def chunked_decay_attention(q, k, v, logdecay, chunk: int, state=None,
+                            scan_chunks: bool = True,
+                            compute_dtype=jnp.float32):
+    """Chunk-parallel linear attention with per-step decay.
+
+    Args:
+      q, k: (B, S, G, N) — G head GROUPS.  Mamba2's shared B/C (ngroups=1)
+        passes G=1 and is never broadcast across heads (a §Perf change:
+        the naive broadcast materialised (B,S,H,N) fp32 copies of q and
+        k — 5.4 GB/layer for zamba2 — for tensors that carry no per-head
+        information).  mLSTM passes G=H.
+      v: (B, S, H, P); logdecay: (B, S, H) (<= 0); H % G == 0.
+      chunk: chunk length (S % chunk == 0).
+      state: optional initial (B, H, N, P).
+
+    Returns:
+      y: (B, S, H, P), final state (B, H, N, P).  fp32 accumulation.
+    """
+    b, s, g, n = q.shape
+    h = v.shape[2]
+    p = v.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    assert h % g == 0, (h, g)
+    hg = h // g
+    nc = s // chunk
+
+    qf = q.reshape(b, nc, chunk, g, n)
+    kf = k.reshape(b, nc, chunk, g, n)
+    vf = v.reshape(b, nc, chunk, g, hg, p)
+    ld = logdecay.astype(jnp.float32).reshape(b, nc, chunk, g, hg)
+
+    if state is None:
+        state = jnp.zeros((b, g, hg, n, p), jnp.float32)
+    else:
+        state = state.reshape(b, g, hg, n, p)
+
+    # move chunk axis to front for scan
+    qf, kf, vf, ld = (jnp.moveaxis(a, 1, 0) for a in (qf, kf, vf, ld))
+
+    idx = jnp.arange(chunk)
+    tri = idx[:, None] >= idx[None, :]                       # (L, M) lower
+
+    cd = compute_dtype
+
+    def body(S, inp):
+        qc, kc, vc, ldc = inp       # (B,L,G,N) (B,L,G,N) (B,L,G,Hg,P) (B,L,G,Hg)
+        cum = jnp.cumsum(ldc, axis=1)                        # (B,L,G,Hg)
+        total = cum[:, -1:]                                  # (B,1,G,Hg)
+        # group-shared part of the scores: (q_i . k_j) per group
+        sc = jnp.einsum("blgn,bmgn->bglm", qc.astype(cd), kc.astype(cd),
+                        preferred_element_type=jnp.float32)  # (B,G,L,M)
+        # per-head decay factor exp(cum_i - cum_j), masked lower-triangular
+        cum_h = jnp.moveaxis(cum, 1, 3)                      # (B,G,Hg,L)
+        dec = jnp.exp(cum_h[..., :, None] - cum_h[..., None, :])
+        scores = (sc[:, :, None] * dec * tri).astype(cd)     # (B,G,Hg,L,M)
+        y_intra = jnp.einsum("bghlm,bmghp->blghp", scores, vc.astype(cd),
+                             preferred_element_type=jnp.float32)
+        # inter-chunk: exp(cum_i) * (q_i @ S_prev)   (exp applied on the
+        # OUTPUT so group-shared q is never expanded per head)
+        qs = jnp.einsum("blgn,bghnp->blghp", qc.astype(cd), S.astype(cd),
+                        preferred_element_type=jnp.float32)
+        y_inter = qs * jnp.exp(cum)[..., None]
+        # state update: exp applied on the per-head v side, k stays shared
+        v_dec = vc.astype(jnp.float32) * jnp.exp(total - cum)[..., None]
+        S_new = jnp.exp(total)[:, 0, ..., None, None] * S + \
+            jnp.einsum("bmgn,bmghp->bghnp", kc.astype(cd),
+                       v_dec.astype(cd),
+                       preferred_element_type=jnp.float32)
+        return S_new, y_intra + y_inter
+
+    if scan_chunks:
+        state, y = jax.lax.scan(body, state, (qf, kf, vf, ld))
+    else:
+        # unrolled (dry-run cost measurement: while bodies count once)
+        ys = []
+        for i in range(nc):
+            state, yi = body(state, (qf[i], kf[i], vf[i], ld[i]))
+            ys.append(yi)
+        y = jnp.stack(ys)
+    y = jnp.moveaxis(y, 0, 1).reshape(b, s, h, p)
+    return y, state.reshape(b, h, n, p)
+
+
+def decay_attention_step(q, k, v, logdecay, state):
+    """Single-token recurrence (decode).  q,k (B,H,N), v (B,H,P),
+    logdecay (B,H), state (B,H,N,P) -> (y (B,H,P), new state)."""
+    state = jnp.exp(logdecay.astype(jnp.float32))[..., None, None] * state \
+        + k.astype(jnp.float32)[..., :, None] * v.astype(jnp.float32)[..., None, :]
+    y = jnp.einsum("bhn,bhnp->bhp", q.astype(jnp.float32), state)
+    return y, state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD)
+# ---------------------------------------------------------------------------
+
+def mamba2_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.ssm_head_dim
+    return d_inner, nheads
+
+
+def init_mamba2(key, cfg):
+    d = cfg.d_model
+    d_inner, nh = mamba2_dims(cfg)
+    n = cfg.ssm_state
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * d_inner + 2 * n + nh          # z, x, B, C, dt
+    return {
+        "ln": layers.init_rmsnorm(d),
+        "in_proj": layers.init_linear(ks[0], d, proj_out),
+        "out_proj": layers.init_linear(ks[1], d_inner, d),
+        "A_log": jnp.zeros((nh,), jnp.float32),            # a = -exp(0) = -1
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.full((nh,), -2.0, jnp.float32),     # softplus(-2)≈0.13
+    }
+
+
+def _mamba2_project(p, cfg, x):
+    d_inner, nh = mamba2_dims(cfg)
+    n = cfg.ssm_state
+    x = layers.rmsnorm(p["ln"], x)               # pre-norm (residual outside)
+    z, xh, bmat, cmat, dt = jnp.split(
+        layers.linear(p["in_proj"], x),
+        [d_inner, 2 * d_inner, 2 * d_inner + n, 2 * d_inner + 2 * n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,S,nh)
+    a = -jnp.exp(p["A_log"])                                       # (nh,)
+    return z, xh, bmat, cmat, dt, a
+
+
+def mamba2_layer(p, cfg, x, state=None):
+    """x (B,S,D) -> (y (B,S,D), final ssm state)."""
+    b, s, d = x.shape
+    d_inner, nh = mamba2_dims(cfg)
+    ph = cfg.ssm_head_dim
+    z, xh, bmat, cmat, dt, a = _mamba2_project(p, cfg, x)
+    xh = xh.reshape(b, s, nh, ph)
+    # B/C shared across heads (ngroups=1): pass as a single GROUP — the
+    # chunked core never broadcasts them per head (§Perf)
+    k = bmat[:, :, None, :]                      # (B,S,1,N)
+    q = cmat[:, :, None, :]
+    v = xh * dt[..., None].astype(xh.dtype)
+    ld = a[None, None, :] * dt                                # (B,S,nh) <= 0
+    y, st = chunked_decay_attention(
+        q, k, v, ld, min(cfg.ssm_chunk, s), state,
+        scan_chunks=cfg.scan_chunks,
+        compute_dtype=(jnp.bfloat16 if cfg.ssm_compute_dtype == "bf16"
+                       else jnp.float32))
+    y = y.astype(x.dtype) + p["D"].astype(x.dtype)[None, None, :, None] * xh
+    y = y.reshape(b, s, d_inner) * jax.nn.silu(z)
+    return layers.linear(p["out_proj"], y), st
+
+
+def mamba2_step(p, cfg, x, state):
+    """Decode: x (B,1,D), state (B,H,N,P)."""
+    b = x.shape[0]
+    d_inner, nh = mamba2_dims(cfg)
+    ph = cfg.ssm_head_dim
+    z, xh, bmat, cmat, dt, a = _mamba2_project(p, cfg, x)
+    xh = xh.reshape(b, nh, ph)
+    k = jnp.broadcast_to(bmat[:, 0, None, :], (b, nh, cfg.ssm_state))
+    q = jnp.broadcast_to(cmat[:, 0, None, :], (b, nh, cfg.ssm_state))
+    dt1 = dt[:, 0]                                            # (B,nh)
+    v = xh * dt1[..., None].astype(xh.dtype)
+    y, state = decay_attention_step(q, k, v, a[None] * dt1, state)
+    y = y.astype(x.dtype) + p["D"].astype(x.dtype)[None, :, None] * xh
+    y = y.reshape(b, 1, d_inner) * jax.nn.silu(z)
+    return layers.linear(p["out_proj"], y), state
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix-memory block)
+# ---------------------------------------------------------------------------
+
+def mlstm_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    dh = d_inner // cfg.n_heads
+    return d_inner, dh
+
+
+def init_mlstm(key, cfg):
+    d = cfg.d_model
+    d_inner, dh = mlstm_dims(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "ln": layers.init_rmsnorm(d),
+        "up": layers.init_linear(ks[0], d, 2 * d_inner),       # [xh, z]
+        "wq": layers.init_linear(ks[1], d_inner, d_inner),
+        "wk": layers.init_linear(ks[2], d_inner, d_inner),
+        "wv": layers.init_linear(ks[3], d_inner, d_inner),
+        "wif": layers.init_linear(ks[4], d_inner, 2 * cfg.n_heads),
+        "norm": layers.init_rmsnorm(d_inner),
+        "down": layers.init_linear(ks[5], d_inner, d),
+    }
+
+
+def _mlstm_project(p, cfg, x):
+    b = x.shape[0]
+    s = x.shape[1]
+    d_inner, dh = mlstm_dims(cfg)
+    h = cfg.n_heads
+    x = layers.rmsnorm(p["ln"], x)               # pre-norm (residual outside)
+    xh, z = jnp.split(layers.linear(p["up"], x), 2, axis=-1)
+    q = layers.linear(p["wq"], xh).reshape(b, s, h, dh) / (dh ** 0.5)
+    k = layers.linear(p["wk"], xh).reshape(b, s, h, dh)
+    v = layers.linear(p["wv"], xh).reshape(b, s, h, dh)
+    gates = layers.linear(p["wif"], xh).astype(jnp.float32)
+    ig, fg = jnp.split(gates, 2, axis=-1)                      # (B,S,H)
+    i_t = jax.nn.sigmoid(ig)
+    ld = jax.nn.log_sigmoid(fg)
+    return xh, z, q, k * i_t[..., None].astype(k.dtype), v, ld
+
+
+def mlstm_layer(p, cfg, x, state=None):
+    b, s, d = x.shape
+    d_inner, dh = mlstm_dims(cfg)
+    xh, z, q, k, v, ld = _mlstm_project(p, cfg, x)
+    # normalizer ridden along as an extra value column
+    ones = jnp.ones((*v.shape[:-1], 1), v.dtype)
+    vn = jnp.concatenate([v, ones], -1)
+    yn, st = chunked_decay_attention(
+        q, k, vn, ld, min(cfg.ssm_chunk, s), state,
+        scan_chunks=cfg.scan_chunks,
+        compute_dtype=(jnp.bfloat16 if cfg.ssm_compute_dtype == "bf16"
+                       else jnp.float32))
+    num, den = yn[..., :dh], yn[..., dh:]
+    y = num / jnp.maximum(jnp.abs(den), 1.0)
+    y = y.astype(x.dtype).reshape(b, s, d_inner)
+    y = layers.rmsnorm(p["norm"], y) * jax.nn.silu(z)
+    return layers.linear(p["down"], y), st
+
+
+def mlstm_step(p, cfg, x, state):
+    b = x.shape[0]
+    d_inner, dh = mlstm_dims(cfg)
+    xh, z, q, k, v, ld = _mlstm_project(p, cfg, x)
+    ones = jnp.ones((b, 1, cfg.n_heads, 1), v.dtype)
+    vn = jnp.concatenate([v, ones], -1)
+    yn, state = decay_attention_step(q[:, 0], k[:, 0], vn[:, 0], ld[:, 0],
+                                     state)
+    num, den = yn[..., :dh], yn[..., dh:]
+    y = (num / jnp.maximum(jnp.abs(den), 1.0)).astype(x.dtype)
+    y = y.reshape(b, 1, d_inner)
+    y = layers.rmsnorm(p["norm"], y) * jax.nn.silu(z)
+    return layers.linear(p["down"], y), state
+
+
+def mlstm_state_shape(cfg, batch: int):
+    d_inner, dh = mlstm_dims(cfg)
+    return (batch, cfg.n_heads, dh, dh + 1)
+
+
+def mamba2_state_shape(cfg, batch: int):
+    _, nh = mamba2_dims(cfg)
+    return (batch, nh, cfg.ssm_state, cfg.ssm_head_dim)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar-memory, sequential)
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg):
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(key, 3)
+    return {
+        "ln": layers.init_rmsnorm(d),
+        # input projections for gates i,f,z,o
+        "wx": layers.init_linear(ks[0], d, 4 * d),
+        # per-head recurrent weights (block-diagonal)
+        "r": jax.random.normal(ks[1], (h, dh, 4 * dh), jnp.float32) * (dh ** -0.5),
+        "down": layers.init_linear(ks[2], d, d),
+    }
+
+
+def _slstm_scan(p, cfg, gx, state):
+    """gx (B,S,H,4*dh) precomputed input gates; sequential over S."""
+    b, s, h, _ = gx.shape
+    dh = cfg.d_model // h
+    c0, n0, h0, m0 = state
+
+    def step(carry, g_t):
+        c, n, hh, m = carry                                     # (B,H,dh) / (B,H)
+        rec = jnp.einsum("bhd,hde->bhe", hh, p["r"])            # (B,H,4dh)
+        g = g_t.astype(jnp.float32) + rec
+        gi, gf, gz, go = jnp.split(g, 4, axis=-1)               # (B,H,dh)
+        # scalar-per-head gates (mean over dh for i/f keeps shapes simple)
+        logi = jnp.mean(gi, -1)
+        logf = jnp.mean(gf, -1)                                  # pre-exp
+        m_new = jnp.maximum(logf + m, logi)                      # stabilizer
+        i_t = jnp.exp(logi - m_new)[..., None]
+        f_t = jnp.exp(logf + m - m_new)[..., None]
+        z_t = jnp.tanh(gz)
+        o_t = jax.nn.sigmoid(go)
+        c = f_t * c + i_t * z_t
+        n = f_t * n + i_t
+        hh = o_t * c / jnp.maximum(n, 1.0)
+        return (c, n, hh, m_new), hh
+
+    gx_t = jnp.moveaxis(gx, 1, 0)                                # (S,B,H,4dh)
+    (c, n, hh, m), ys = jax.lax.scan(step, (c0, n0, h0, m0), gx_t)
+    return jnp.moveaxis(ys, 0, 1), (c, n, hh, m)                 # (B,S,H,dh)
+
+
+def slstm_layer(p, cfg, x, state=None):
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dh = d // h
+    if state is None:
+        state = slstm_init_state(cfg, b)
+    x = layers.rmsnorm(p["ln"], x)               # pre-norm (residual outside)
+    gx = layers.linear(p["wx"], x).reshape(b, s, h, 4 * dh)
+    y, state = _slstm_scan(p, cfg, gx, state)
+    y = y.astype(x.dtype).reshape(b, s, d)
+    return layers.linear(p["down"], y), state
+
+
+def slstm_step(p, cfg, x, state):
+    y, state = slstm_layer(p, cfg, x, state)
+    return y, state
+
+
+def slstm_init_state(cfg, batch: int):
+    h = cfg.n_heads
+    dh = cfg.d_model // h
+    z = jnp.zeros((batch, h, dh), jnp.float32)
+    zm = jnp.full((batch, h), -1e30, jnp.float32)
+    return (z, z, z, zm)

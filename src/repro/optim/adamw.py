@@ -1,0 +1,71 @@
+"""AdamW with global-norm clipping and cosine schedule (self-contained).
+
+State layout mirrors the params pytree: {'m': tree, 'v': tree,
+'step': scalar}.  The launcher shards m/v with the ZeRO-1 rule (see
+launch/shardings.py): same spec as the param plus the 'data' axis on the
+largest divisible unsharded dimension.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+
+
+def cosine_lr(cfg: AdamWConfig, step):
+    step = jnp.asarray(step, jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    t = (step - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * jnp.clip(t, 0.0, 1.0)))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def adamw_init(params):
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return {"m": zeros,
+            "v": jax.tree.map(jnp.copy, zeros),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig):
+    step = state["step"] + 1
+    lr = cosine_lr(cfg, step)
+
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m / (1 - cfg.b1 ** step.astype(jnp.float32))
+        vh = v / (1 - cfg.b2 ** step.astype(jnp.float32))
+        newp = p.astype(jnp.float32) - lr * (
+            mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32))
+        return newp.astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, gnorm

@@ -1,0 +1,67 @@
+"""The assigned architecture table, asserted EXACTLY (one test per arch)."""
+
+import pytest
+
+from repro.configs import ARCH_NAMES, INPUT_SHAPES, get_config
+
+EXPECTED = {
+    # name: (family, L, d_model, H, kv, d_ff, vocab, extras)
+    "deepseek-moe-16b": ("moe", 28, 2048, 16, 16, 1408, 102_400,
+                         dict(n_experts=64, top_k=6, n_shared_experts=2)),
+    "granite-34b": ("dense", 88, 6144, 48, 1, 24_576, 49_152, {}),
+    "qwen3-moe-235b-a22b": ("moe", 94, 4096, 64, 4, 1536, 151_936,
+                            dict(n_experts=128, top_k=8)),
+    "internvl2-1b": ("vlm", 24, 896, 14, 2, 4864, 151_655, {}),
+    "granite-20b": ("dense", 52, 6144, 48, 1, 24_576, 49_152, {}),
+    "xlstm-125m": ("ssm", 12, 768, 4, 4, 0, 50_304, {}),
+    "qwen2.5-14b": ("dense", 48, 5120, 40, 8, 13_824, 152_064,
+                    dict(qkv_bias=True)),
+    "whisper-tiny": ("audio", 4, 384, 6, 6, 1536, 51_865,
+                     dict(is_encoder_decoder=True)),
+    "glm4-9b": ("dense", 40, 4096, 32, 2, 13_696, 151_552, {}),
+    "zamba2-2.7b": ("hybrid", 54, 2560, 32, 32, 10_240, 32_000,
+                    dict(ssm_state=64)),
+}
+
+
+def test_all_ten_archs_present():
+    assert set(ARCH_NAMES) == set(EXPECTED)
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED))
+def test_exact_assigned_numbers(arch):
+    fam, L, d, h, kv, dff, v, extras = EXPECTED[arch]
+    cfg = get_config(arch)
+    assert cfg.family == fam
+    assert cfg.n_layers == L
+    assert cfg.d_model == d
+    assert cfg.n_heads == h
+    assert cfg.n_kv_heads == kv
+    assert cfg.d_ff == dff
+    assert cfg.vocab_size == v
+    for k, val in extras.items():
+        assert getattr(cfg, k) == val, (k, getattr(cfg, k), val)
+
+
+def test_input_shapes_table():
+    t = INPUT_SHAPES
+    assert (t["train_4k"].seq_len, t["train_4k"].global_batch) == (4096, 256)
+    assert (t["prefill_32k"].seq_len, t["prefill_32k"].global_batch) == \
+        (32_768, 32)
+    assert (t["decode_32k"].seq_len, t["decode_32k"].global_batch) == \
+        (32_768, 128)
+    assert (t["long_500k"].seq_len, t["long_500k"].global_batch) == \
+        (524_288, 1)
+    assert t["train_4k"].kind == "train"
+    assert t["decode_32k"].kind == "decode"
+
+
+def test_long_500k_skips():
+    """Sub-quadratic policy: enc-dec whisper skips; recurrent archs run
+    natively; quadratic archs run via the sliding-window variant."""
+    assert not get_config("whisper-tiny").supports_shape("long_500k")
+    assert get_config("xlstm-125m").supports_shape("long_500k")
+    assert get_config("zamba2-2.7b").supports_shape("long_500k")
+    cfg = get_config("glm4-9b")
+    assert cfg.supports_shape("long_500k")
+    assert cfg.long_context_window > 0   # window variant, per DESIGN.md

@@ -1,0 +1,68 @@
+"""Mini dry-run: the full lower+compile+roofline pipeline on a 2x2 debug
+mesh with reduced configs (subprocess: needs 4 forced host devices).
+
+The production 512-chip dry-run is exercised by
+``python -m repro.launch.dryrun --all`` (see EXPERIMENTS.md); this test
+guards the machinery itself so regressions surface in CI time.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import json
+import repro.configs.base as base
+from repro.configs.base import InputShape
+base.INPUT_SHAPES["train_4k"] = InputShape("train_4k", 256, 8, "train")
+base.INPUT_SHAPES["prefill_32k"] = InputShape("prefill_32k", 512, 4, "prefill")
+base.INPUT_SHAPES["decode_32k"] = InputShape("decode_32k", 512, 8, "decode")
+base.INPUT_SHAPES["long_500k"] = InputShape("long_500k", 2048, 1, "decode")
+from repro.configs import get_config
+from repro.launch.dryrun import run_one
+from repro.launch.mesh import make_debug_mesh
+
+mesh = make_debug_mesh(2, 2)
+out = {}
+for arch in ["glm4-9b", "deepseek-moe-16b", "xlstm-125m", "zamba2-2.7b",
+             "whisper-tiny"]:
+    cfg = get_config(arch, smoke=True)
+    for sname in ["train_4k", "decode_32k"]:
+        rec = run_one(arch, sname, multi_pod=False, cfg=cfg, mesh=mesh,
+                      verbose=False)
+        out[f"{arch}/{sname}"] = {
+            "status": rec["status"],
+            "dominant": rec.get("roofline", {}).get("dominant"),
+            "flops": rec.get("flops", 0),
+            "error": rec.get("error", "")[:200],
+        }
+print("RESULT" + json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def mini_dryrun():
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH=os.pathsep.join(
+                   [os.path.join(os.path.dirname(__file__), "..", "src")]
+                   + os.environ.get("PYTHONPATH", "").split(os.pathsep)))
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=2400)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT")][0]
+    return json.loads(line[len("RESULT"):])
+
+
+def test_all_combos_compile(mini_dryrun):
+    bad = {k: v for k, v in mini_dryrun.items() if v["status"] != "ok"}
+    assert not bad, bad
+
+
+def test_roofline_terms_present(mini_dryrun):
+    for k, v in mini_dryrun.items():
+        assert v["dominant"] in ("compute", "memory", "collective"), (k, v)
+        assert v["flops"] > 0, (k, v)

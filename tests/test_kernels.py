@@ -1,0 +1,115 @@
+"""Pallas kernel sweeps: shapes x dtypes, interpret=True vs ref.py oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+# ---------------------------------------------------------------------------
+# hist
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,f,nbins,nn", [
+    (257, 3, 8, 1),          # odd rows -> padding path
+    (1024, 7, 17, 5),        # odd bins
+    (512, 1, 33, 8),         # single feature
+    (2000, 11, 64, 16),      # node chunking kicks in
+])
+def test_hist_matches_ref(n, f, nbins, nn):
+    key = jax.random.PRNGKey(n + f)
+    bins = jax.random.randint(key, (n, f), 0, nbins)
+    node = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, nn)
+    gh = jax.random.normal(jax.random.fold_in(key, 2), (n, 2))
+    r = ref.hist_ref(bins, node, gh, n_nodes=nn, nbins=nbins)
+    p = ops.hist(bins, node, gh, n_nodes=nn, nbins=nbins,
+                 backend="interpret")
+    np.testing.assert_allclose(np.asarray(r), np.asarray(p),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_hist_masks_negative_nodes():
+    bins = jnp.zeros((8, 2), jnp.int32)
+    node = jnp.asarray([0, 0, -1, -1, 1, 1, -1, 0])
+    gh = jnp.ones((8, 2))
+    out = ops.hist(bins, node, gh, n_nodes=2, nbins=4, backend="interpret")
+    assert float(out.sum()) == pytest.approx(20.0)  # 5 rows x 2 feats x 2 stats
+    r = ref.hist_ref(bins, node, gh, n_nodes=2, nbins=4)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(r))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_hist_dtypes(dtype):
+    key = jax.random.PRNGKey(0)
+    bins = jax.random.randint(key, (300, 4), 0, 9)
+    node = jax.random.randint(key, (300,), 0, 3)
+    gh = jax.random.normal(key, (300, 2)).astype(dtype)
+    r = ref.hist_ref(bins, node, gh, n_nodes=3, nbins=9)
+    p = ops.hist(bins, node, gh, n_nodes=3, nbins=9, backend="interpret")
+    np.testing.assert_allclose(np.asarray(r), np.asarray(p), rtol=2e-2,
+                               atol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# split_gain
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("nn,f,nbins", [(1, 2, 8), (4, 5, 16), (16, 3, 33)])
+@pytest.mark.parametrize("l2,gamma,mcw", [(1.0, 0.0, 1e-6), (0.5, 0.3, 2.0)])
+def test_split_gain_matches_ref(nn, f, nbins, l2, gamma, mcw):
+    key = jax.random.PRNGKey(nn * f)
+    hist = jnp.abs(jax.random.normal(key, (nn, f, nbins, 2)))
+    g1, i1 = ref.split_gain_ref(hist, l2=l2, gamma=gamma,
+                                min_child_weight=mcw)
+    g2, i2 = ops.split_gain(hist, l2=l2, gamma=gamma, min_child_weight=mcw,
+                            backend="interpret")
+    finite = np.isfinite(np.asarray(g1))
+    np.testing.assert_allclose(np.asarray(g1)[finite],
+                               np.asarray(g2)[finite], rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(i1)[finite],
+                                  np.asarray(i2)[finite])
+
+
+def test_split_gain_never_picks_last_bin():
+    hist = jnp.ones((2, 3, 8, 2))
+    _, idx = ops.split_gain(hist, backend="interpret")
+    assert int(jnp.max(idx)) < 7
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,hq,hkv,s,d", [
+    (1, 4, 4, 256, 64),      # MHA
+    (2, 8, 2, 256, 64),      # GQA
+    (1, 8, 1, 384, 128),     # MQA, odd-ish seq (384 = 3 x 128)
+])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 128),
+                                           (False, 0)])
+def test_flash_attention_matches_ref(b, hq, hkv, s, d, causal, window):
+    key = jax.random.PRNGKey(b + s)
+    q = jax.random.normal(key, (b, hq, s, d), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, hkv, s, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, hkv, s, d))
+    a_ref = ref.attention_ref(q, k, v, causal=causal, window=window)
+    a_pal = ops.flash_attention(q, k, v, causal=causal, window=window,
+                                backend="interpret")
+    np.testing.assert_allclose(np.asarray(a_ref), np.asarray(a_pal),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_bf16():
+    key = jax.random.PRNGKey(9)
+    q = jax.random.normal(key, (1, 4, 256, 64)).astype(jnp.bfloat16)
+    k = jax.random.normal(jax.random.fold_in(key, 1),
+                          (1, 2, 256, 64)).astype(jnp.bfloat16)
+    v = jax.random.normal(jax.random.fold_in(key, 2),
+                          (1, 2, 256, 64)).astype(jnp.bfloat16)
+    a_ref = ref.attention_ref(q, k, v, causal=True)
+    a_pal = ops.flash_attention(q, k, v, causal=True, backend="interpret")
+    np.testing.assert_allclose(np.asarray(a_ref, np.float32),
+                               np.asarray(a_pal, np.float32),
+                               rtol=3e-2, atol=3e-2)

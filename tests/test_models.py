@@ -1,0 +1,121 @@
+"""Per-architecture smoke tests: REDUCED same-family variants (<=2 layers,
+d_model<=512, <=4 experts) run one forward/train step on CPU, asserting
+output shapes and no NaNs, plus a serve-step decode — as required by the
+assignment brief."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.launch import steps
+from repro.models import model
+from repro.optim import AdamWConfig, adamw_init
+
+
+def _batch(cfg, b=2, s=64, seed=0):
+    key = jax.random.PRNGKey(seed)
+    batch = {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(
+            key, (b, cfg.n_frontend_tokens, cfg.d_model))
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            key, (b, cfg.n_frontend_tokens, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_smoke_reduced_config_limits(arch):
+    cfg = get_config(arch, smoke=True)
+    assert cfg.n_layers <= 2
+    assert cfg.d_model <= 512
+    assert cfg.n_experts <= 4
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_forward_shapes_and_finite(arch):
+    cfg = get_config(arch, smoke=True)
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    b, s = 2, 64
+    batch = _batch(cfg, b, s)
+    logits, aux = model.forward(params, cfg, batch)
+    assert logits.shape == (b, s, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_one_train_step(arch):
+    cfg = get_config(arch, smoke=True)
+    opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=0, total_steps=10)
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    step = steps.make_train_step(cfg, opt_cfg)
+    batch = _batch(cfg)
+    p2, o2, metrics = jax.jit(step)(params, opt, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert float(metrics["gnorm"]) > 0.0
+    # params actually moved
+    moved = jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()),
+                         params, p2)
+    assert max(jax.tree.leaves(moved)) > 0.0
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_serve_step_decode(arch):
+    cfg = get_config(arch, smoke=True)
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    b, cache = 2, 32
+    state = model.init_decode_state(cfg, b, cache)
+    serve = steps.make_serve_step(cfg)
+    tok = jnp.zeros((b, 1), jnp.int32)
+    pos = jnp.full((b,), 3, jnp.int32)
+    logits, state2 = jax.jit(serve)(params, state, tok, pos)
+    assert logits.shape == (b, 1, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    # state must change somewhere
+    diff = jax.tree.map(lambda a, b: float(jnp.abs(
+        a.astype(jnp.float32) - b.astype(jnp.float32)).max()), state, state2)
+    assert max(jax.tree.leaves(diff)) > 0.0
+
+
+def test_loss_decreases_tiny_lm():
+    """A few steps on repetitive data must reduce the loss (dense family
+    as the representative; the full sweep would be slow on 1 CPU)."""
+    cfg = get_config("glm4-9b", smoke=True)
+    opt_cfg = AdamWConfig(lr=3e-3, warmup_steps=0, total_steps=50)
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    step = jax.jit(steps.make_train_step(cfg, opt_cfg))
+    key = jax.random.PRNGKey(1)
+    toks = jax.random.randint(key, (2, 64), 0, 32)   # tiny vocab slice
+    batch = {"tokens": toks}
+    losses = []
+    for _ in range(8):
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.5, losses
+
+
+def test_microbatched_step_matches_plain():
+    cfg = get_config("glm4-9b", smoke=True)
+    opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=0, total_steps=10,
+                          clip_norm=1e9)
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    batch = _batch(cfg, b=4)
+    s1 = jax.jit(steps.make_train_step(cfg, opt_cfg, microbatches=1))
+    s2 = jax.jit(steps.make_train_step(cfg, opt_cfg, microbatches=2))
+    p1, o1, m1 = s1(params, opt, batch)
+    p2, o2, m2 = s2(params, opt, batch)
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-3)
+    # compare the accumulated grads (first moments): Adam's step-1 update
+    # normalises g/|g|, so tiny fp noise flips signs on ~zero grads —
+    # the gradients themselves must agree
+    g1 = jnp.concatenate([a.ravel() for a in jax.tree.leaves(o1["m"])])
+    g2 = jnp.concatenate([a.ravel() for a in jax.tree.leaves(o2["m"])])
+    scale = float(jnp.abs(g1).max())
+    assert float(jnp.abs(g1 - g2).max()) < 5e-3 * scale + 1e-7

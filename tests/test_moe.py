@@ -1,0 +1,84 @@
+"""MoE layer: dispatch-mode equivalence, grouping, capacity semantics."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import moe
+
+
+def _cfg(**kw):
+    return dataclasses.replace(get_config("deepseek-moe-16b", smoke=True),
+                               **kw)
+
+
+def _run(cfg, seed=0, b=2, s=32):
+    key = jax.random.PRNGKey(seed)
+    p = moe.init_moe(key, cfg)
+    x = jax.random.normal(jax.random.fold_in(key, 1),
+                          (b, s, cfg.d_model), jnp.float32) * 0.3
+    return moe.moe_layer(p, cfg, x)
+
+
+def test_sort_equals_onehot_dispatch():
+    """The §Perf sort-based dispatch must agree with the one-hot baseline
+    whenever no tokens are dropped (generous capacity)."""
+    c1 = _cfg(moe_dispatch="onehot", capacity_factor=8.0)
+    c2 = _cfg(moe_dispatch="sort", capacity_factor=8.0)
+    y1, a1 = _run(c1)
+    y2, a2 = _run(c2)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-5)
+    assert float(a1) == pytest.approx(float(a2), rel=1e-5)
+
+
+def test_grouping_invariance_with_headroom():
+    """With ample capacity, dispatching in G groups == 1 group."""
+    y1, _ = _run(_cfg(moe_groups=1, capacity_factor=8.0))
+    y2, _ = _run(_cfg(moe_groups=4, capacity_factor=8.0))
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_capacity_drops_tokens():
+    """Tiny capacity must drop tokens (outputs differ from roomy run) but
+    stay finite."""
+    y_room, _ = _run(_cfg(capacity_factor=8.0))
+    y_tight, _ = _run(_cfg(capacity_factor=0.25))
+    assert bool(jnp.all(jnp.isfinite(y_tight)))
+    assert float(jnp.abs(y_room - y_tight).max()) > 1e-6
+
+
+def test_aux_loss_positive_and_order_one():
+    _, aux = _run(_cfg())
+    assert 0.0 < float(aux) < 1.0
+
+
+def test_shared_experts_contribute():
+    c_with = _cfg(n_shared_experts=1)
+    c_wo = dataclasses.replace(c_with, n_shared_experts=0)
+    key = jax.random.PRNGKey(0)
+    p = moe.init_moe(key, c_with)
+    x = jax.random.normal(key, (1, 8, c_with.d_model)) * 0.3
+    y1, _ = moe.moe_layer(p, c_with, x)
+    p2 = {k: v for k, v in p.items() if k != "shared"}
+    y2, _ = moe.moe_layer(p2, c_wo, x)
+    assert float(jnp.abs(y1 - y2).max()) > 1e-6
+
+
+def test_moe_grad_flows_to_router():
+    cfg = _cfg()
+    key = jax.random.PRNGKey(0)
+    p = moe.init_moe(key, cfg)
+    x = jax.random.normal(key, (1, 16, cfg.d_model)) * 0.3
+
+    def loss(p):
+        y, aux = moe.moe_layer(p, cfg, x)
+        return jnp.sum(y ** 2) + aux
+    g = jax.grad(loss)(p)
+    assert float(jnp.abs(g["router"]["w"]).max()) > 0.0
+    assert float(jnp.abs(g["wi"]).max()) > 0.0

@@ -1,0 +1,61 @@
+"""Proposal strategies + binning consistency invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import binning, proposal
+
+
+@pytest.mark.parametrize("strategy", ["random", "weighted_quantile",
+                                      "uniform_range", "exact",
+                                      "gk_quantile"])
+def test_propose_shapes_and_sorted(strategy):
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (500, 4))
+    c = proposal.propose(strategy, x, 8, key=key,
+                         hess=jnp.ones(500))
+    assert c.shape == (4, 8)
+    assert bool(jnp.all(jnp.diff(c, axis=1) >= 0))
+
+
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_binning_threshold_consistency(seed):
+    """The core invariant linking train (bin space) and inference (raw):
+    bin_id(x) <= s  <=>  x <= candidates[s]."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(200, 1)).astype(np.float32)
+    cand = np.sort(rng.normal(size=(1, 8)).astype(np.float32), axis=1)
+    bins = np.asarray(binning.bin_features(jnp.asarray(x), jnp.asarray(cand)))
+    for s in range(8):
+        left_by_bin = bins[:, 0] <= s
+        left_by_val = x[:, 0] <= cand[0, s]
+        np.testing.assert_array_equal(left_by_bin, left_by_val)
+
+
+def test_bin_range():
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (300, 3))
+    c = proposal.propose("random", x, 8, key=key)
+    b = binning.bin_features(x, c)
+    assert int(b.min()) >= 0 and int(b.max()) <= 8   # nbins = k+1
+
+
+def test_resample_gathered_deterministic():
+    """Algorithm 1's shared-key resample: every worker computes the SAME
+    candidate set from the gathered pool (no broadcast needed)."""
+    key = jax.random.PRNGKey(3)
+    pool = jax.random.normal(key, (4, 5, 8))     # (workers, f, b)
+    c1 = proposal.resample_gathered(key, pool, 8)
+    c2 = proposal.resample_gathered(key, pool, 8)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+    assert c1.shape == (5, 8)
+
+
+def test_exact_covers_unique_values():
+    x = np.array([[0.0], [1.0], [2.0], [1.0]], dtype=np.float32)
+    c = proposal.exact_candidates(x, 4)
+    assert set(np.unique(c[0])) == {0.0, 1.0, 2.0}

@@ -1,0 +1,58 @@
+"""Theorem 1: expected rank error of random candidate subsets.
+
+Property tests (hypothesis) of the closed form against Monte-Carlo, plus
+the paper's Fig.2 claim: deterministic quantile binning is statistically
+indistinguishable from random selection.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import rank_error as re_mod
+
+
+def test_closed_form_values():
+    # E[R] = (n-k)/(k+1)
+    assert re_mod.expected_rank_error(100, 100) == 0.0
+    assert re_mod.expected_rank_error(100, 1) == pytest.approx(99 / 2)
+    assert re_mod.normalized_rank_error(1000, 9) == pytest.approx(0.1)
+
+
+@given(n=st.integers(10, 400), k=st.integers(1, 9))
+@settings(max_examples=20, deadline=None)
+def test_normalized_error_is_1_over_k_plus_1(n, k):
+    k = min(k, n - 1)
+    assert re_mod.normalized_rank_error(n, k) == pytest.approx(1 / (k + 1))
+
+
+@pytest.mark.parametrize("n,k", [(200, 4), (200, 16), (500, 9)])
+def test_monte_carlo_matches_theorem(n, k):
+    """E[R] over random subsets ~= (n-k)/(k+1); rank error is independent
+    of the objective, so any fixed f works."""
+    key = jax.random.PRNGKey(0)
+    f = re_mod.smooth_random_objective(key, n)
+    est = float(re_mod.mc_rank_error_random(key, f, k, trials=4000))
+    expect = re_mod.expected_rank_error(n, k)
+    assert est == pytest.approx(expect, rel=0.15), (est, expect)
+
+
+def test_rank_error_of_subset_basics():
+    f = jnp.asarray([0.1, 5.0, 2.0, 0.3])
+    # subset containing the argmax -> 0
+    assert int(re_mod.rank_error_of_subset(f, jnp.asarray([0, 1]))) == 0
+    # subset with only the 3rd best -> rank 2
+    assert int(re_mod.rank_error_of_subset(f, jnp.asarray([3]))) == 2
+
+
+def test_fig2_quantile_equivalent_to_random():
+    """The paper's Fig.2: quantile bins show the same mean normalised rank
+    error as random selection (both ~1/(k+1)); neither can exploit f."""
+    out = re_mod.fig2_experiment(seed=0, n=512, ks=[4, 8, 16], trials=24)
+    for r, q, t in zip(out["random"], out["quantile"], out["theory"]):
+        assert r == pytest.approx(t, rel=0.5)
+        assert q == pytest.approx(t, rel=0.6)
+        # and the two strategies are close to EACH OTHER (the claim)
+        assert abs(r - q) < 0.6 * t + 0.02

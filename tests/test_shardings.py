@@ -1,0 +1,89 @@
+"""Sharding-rule unit tests (no devices needed: specs are pure data)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.launch.shardings import (batch_spec, param_spec, zero_extend)
+
+
+class FakeMesh:
+    axis_names = ("data", "model")
+    shape = {"data": 16, "model": 16}
+    size = 256
+
+
+class FakePodMesh:
+    axis_names = ("pod", "data", "model")
+    shape = {"pod": 2, "data": 16, "model": 16}
+    size = 512
+
+
+MESH = FakeMesh()
+
+
+def test_column_parallel():
+    assert param_spec("layers/attn/wq/w", (40, 4096, 4096), MESH) == \
+        P(None, None, "model")
+    assert param_spec("layers/mlp/wi", (40, 4096, 13696), MESH) == \
+        P(None, None, "model")
+
+
+def test_row_parallel():
+    assert param_spec("layers/attn/wo/w", (40, 4096, 4096), MESH) == \
+        P(None, "model", None)
+    assert param_spec("layers/mlp/wo", (40, 13696, 4096), MESH) == \
+        P(None, "model", None)
+
+
+def test_mqa_kv_replicated():
+    cfg = get_config("granite-34b")          # kv = 1
+    assert param_spec("layers/attn/wk/w", (88, 6144, 128), MESH, cfg) == \
+        P(None, None, None)
+
+
+def test_gqa_kv_sharded_when_divisible():
+    cfg = get_config("deepseek-moe-16b")     # kv = 16
+    assert param_spec("layers/attn/wk/w", (28, 2048, 2048), MESH, cfg) == \
+        P(None, None, "model")
+
+
+def test_experts_sharded():
+    assert param_spec("layers/moe/wi", (94, 128, 4096, 1536), MESH) == \
+        P(None, "model", None, None)
+
+
+def test_norms_replicated():
+    assert param_spec("layers/ln1/scale", (40, 4096), MESH) == P()
+
+
+def test_vocab_sharded_embed():
+    assert param_spec("embed/table", (151552, 4096), MESH) == \
+        P("model", None)
+
+
+def test_indivisible_dims_fall_back():
+    # vocab 151655 (internvl) is not divisible by 16 -> replicate
+    assert param_spec("embed/table", (151655, 896), MESH) == P(None, None)
+
+
+def test_zero_extend_picks_largest_free_dim():
+    spec = zero_extend(P(None, None, "model"), (40, 4096, 13696), MESH)
+    assert spec == P(None, "data", "model")
+    # fully sharded already -> unchanged
+    spec2 = zero_extend(P("data", "model"), (160, 4096), MESH)
+    assert spec2 == P("data", "model")
+
+
+def test_zero_extend_multipod_uses_both_axes():
+    spec = zero_extend(P(None, None), (64, 4096), FakePodMesh())
+    assert spec == P(None, ("pod", "data"))
+
+
+def test_batch_spec_divisible():
+    assert batch_spec((256, 4096), MESH) == P("data", None)
+    assert batch_spec((256, 4096), FakePodMesh()) == P(("pod", "data"), None)
+    # batch 1 (long_500k) cannot shard
+    assert batch_spec((1, 4096), MESH) == P(None, None)

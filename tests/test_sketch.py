@@ -1,0 +1,52 @@
+"""GK quantile summary: the epsilon rank guarantee (property test)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sketch
+
+
+@given(n=st.integers(50, 2000), seed=st.integers(0, 100),
+       eps=st.sampled_from([0.05, 0.1, 0.2]))
+@settings(max_examples=15, deadline=None)
+def test_gk_rank_guarantee(n, seed, eps):
+    rng = np.random.default_rng(seed)
+    data = rng.normal(size=n).astype(np.float32)
+    sk = sketch.GKSummary(eps)
+    sk.extend(data)
+    s = np.sort(data)
+    for phi in (0.1, 0.25, 0.5, 0.75, 0.9):
+        v = sk.query(phi)
+        # actual rank of the answer
+        r = np.searchsorted(s, v, side="right")
+        target = int(np.ceil(phi * n))
+        assert abs(r - target) <= 2 * eps * n + 1, (phi, r, target)
+
+
+def test_gk_summary_is_compact():
+    rng = np.random.default_rng(0)
+    sk = sketch.GKSummary(0.05)
+    sk.extend(rng.normal(size=5000))
+    sk.compress()
+    # GK guarantees O((1/eps) log(eps n)) tuples; generous bound
+    assert len(sk) < 1500
+
+
+def test_gk_candidates_sorted_unique():
+    rng = np.random.default_rng(1)
+    c = sketch.gk_candidates(rng.normal(size=3000), 16)
+    assert np.all(np.diff(c) >= 0)
+    assert len(c) <= 16
+
+
+def test_weighted_quantiles_skew():
+    """Candidates concentrate where the hessian mass is."""
+    import jax.numpy as jnp
+    v = jnp.linspace(0.0, 1.0, 1000)
+    w = jnp.where(v < 0.2, 10.0, 0.1)    # mass at the left
+    c = sketch.weighted_quantiles(v, w, 9)
+    assert float(jnp.median(c)) < 0.3
+    # uniform weights -> evenly spread
+    cu = sketch.weighted_quantiles(v, jnp.ones_like(v), 9)
+    assert float(jnp.median(cu)) == pytest.approx(0.5, abs=0.05)

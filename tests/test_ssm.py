@@ -1,0 +1,118 @@
+"""SSM invariants: chunked-parallel forms == sequential recurrences."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import ssm
+
+
+def _seq_reference(q, k, v, ld):
+    """Token-by-token recurrence using decay_attention_step."""
+    b, s, h, n = q.shape
+    p = v.shape[-1]
+    state = jnp.zeros((b, h, n, p), jnp.float32)
+    ys = []
+    for t in range(s):
+        y, state = ssm.decay_attention_step(q[:, t], k[:, t], v[:, t],
+                                            ld[:, t], state)
+        ys.append(y)
+    return jnp.stack(ys, 1), state
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16])
+def test_chunked_decay_attention_matches_sequential(chunk):
+    key = jax.random.PRNGKey(0)
+    b, s, h, n, p = 2, 32, 3, 8, 5
+    q = jax.random.normal(key, (b, s, h, n))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, h, n)) * 0.3
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, h, p))
+    ld = -jnp.abs(jax.random.normal(jax.random.fold_in(key, 3), (b, s, h)))
+    y_seq, st_seq = _seq_reference(q, k, v, ld)
+    y_chk, st_chk = ssm.chunked_decay_attention(q, k, v, ld, chunk)
+    np.testing.assert_allclose(np.asarray(y_seq), np.asarray(y_chk),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_seq), np.asarray(st_chk),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_chunked_scan_vs_unrolled():
+    key = jax.random.PRNGKey(5)
+    b, s, h, n, p = 1, 64, 2, 4, 4
+    args = (jax.random.normal(key, (b, s, h, n)),
+            jax.random.normal(key, (b, s, h, n)),
+            jax.random.normal(key, (b, s, h, p)),
+            -jnp.abs(jax.random.normal(key, (b, s, h))))
+    y1, s1 = ssm.chunked_decay_attention(*args, 16, scan_chunks=True)
+    y2, s2 = ssm.chunked_decay_attention(*args, 16, scan_chunks=False)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-6)
+
+
+def test_mamba2_layer_matches_steps():
+    """Chunked SSD prefill == token-by-token decode recurrence."""
+    cfg = get_config("zamba2-2.7b", smoke=True)
+    key = jax.random.PRNGKey(1)
+    p = ssm.init_mamba2(key, cfg)
+    b, s = 2, 32
+    x = jax.random.normal(key, (b, s, cfg.d_model), jnp.float32) * 0.1
+    y_full, st_full = ssm.mamba2_layer(p, cfg, x)
+    state = jnp.zeros(ssm.mamba2_state_shape(cfg, b), jnp.float32)
+    ys = []
+    for t in range(s):
+        y, state = ssm.mamba2_step(p, cfg, x[:, t:t + 1], state)
+        ys.append(y)
+    y_step = jnp.concatenate(ys, 1)
+    np.testing.assert_allclose(np.asarray(y_full, np.float32),
+                               np.asarray(y_step, np.float32),
+                               rtol=2e-2, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(st_full), np.asarray(state),
+                               rtol=2e-2, atol=2e-3)
+
+
+def test_mlstm_layer_matches_steps():
+    cfg = get_config("xlstm-125m", smoke=True)
+    key = jax.random.PRNGKey(2)
+    p = ssm.init_mlstm(key, cfg)
+    b, s = 2, 32
+    x = jax.random.normal(key, (b, s, cfg.d_model), jnp.float32) * 0.1
+    y_full, st_full = ssm.mlstm_layer(p, cfg, x)
+    state = jnp.zeros(ssm.mlstm_state_shape(cfg, b), jnp.float32)
+    ys = []
+    for t in range(s):
+        y, state = ssm.mlstm_step(p, cfg, x[:, t:t + 1], state)
+        ys.append(y)
+    y_step = jnp.concatenate(ys, 1)
+    np.testing.assert_allclose(np.asarray(y_full, np.float32),
+                               np.asarray(y_step, np.float32),
+                               rtol=2e-2, atol=2e-3)
+
+
+def test_slstm_step_continues_sequence():
+    """Running sLSTM over [a;b] == running over a, then b from a's state."""
+    cfg = get_config("xlstm-125m", smoke=True)
+    key = jax.random.PRNGKey(3)
+    p = ssm.init_slstm(key, cfg)
+    b = 2
+    x = jax.random.normal(key, (b, 16, cfg.d_model), jnp.float32) * 0.1
+    y_all, _ = ssm.slstm_layer(p, cfg, x)
+    y_a, st = ssm.slstm_layer(p, cfg, x[:, :8])
+    y_b, _ = ssm.slstm_layer(p, cfg, x[:, 8:], st)
+    np.testing.assert_allclose(np.asarray(y_all, np.float32),
+                               np.asarray(jnp.concatenate([y_a, y_b], 1),
+                                          np.float32),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_decay_preserves_stability():
+    """With decays <= 1 and bounded inputs the state stays bounded."""
+    key = jax.random.PRNGKey(4)
+    b, s, h, n, p = 1, 512, 2, 4, 4
+    q = jax.random.normal(key, (b, s, h, n))
+    k = jax.random.normal(key, (b, s, h, n))
+    v = jax.random.normal(key, (b, s, h, p))
+    ld = jnp.full((b, s, h), -0.05)
+    y, st = ssm.chunked_decay_attention(q, k, v, ld, 64)
+    assert bool(jnp.all(jnp.isfinite(y)))
+    assert float(jnp.abs(st).max()) < 1e4

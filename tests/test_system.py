@@ -1,0 +1,78 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The paper's three claims, verified at test scale:
+  1. random split sampling reaches quantile-sketch accuracy (DT + GBDT);
+  2. random proposal is cheaper than sketch building;
+  3. the distributed trainer (Algorithm 1) preserves both.
+(3) lives in test_distributed.py; (1)-(2) here, on the synthetic
+analogues of the paper's dataset families.
+"""
+
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import boosting
+from repro.data import make_dataset
+
+
+@pytest.mark.parametrize("ds", ["susy-like", "higgs-like"])
+def test_gbdt_random_vs_quantile_classification(ds):
+    xtr, ytr, xte, yte, task = make_dataset(ds, 8000, 2000)
+    accs = {}
+    for strat in ("random", "weighted_quantile", "uniform_range"):
+        cfg = boosting.GBDTConfig(n_trees=10, max_depth=5, n_candidates=16,
+                                  strategy=strat)
+        m = boosting.fit(xtr, ytr, cfg, jax.random.PRNGKey(0))
+        accs[strat] = boosting.accuracy(m, xte, yte)
+    # all strategies within noise of each other (Table 2)
+    vals = list(accs.values())
+    assert max(vals) - min(vals) < 0.04, accs
+    assert accs["random"] > 0.6
+
+
+def test_gbdt_regression_mape_parity():
+    xtr, ytr, xte, yte, task = make_dataset("pjm-like", 6000, 1500)
+    mapes = {}
+    for strat in ("random", "weighted_quantile"):
+        cfg = boosting.GBDTConfig(n_trees=20, max_depth=5, n_candidates=16,
+                                  strategy=strat, objective="mse")
+        m = boosting.fit(xtr, ytr, cfg, jax.random.PRNGKey(1))
+        pred = np.asarray(m.predict(xte))
+        mapes[strat] = float(np.mean(np.abs(
+            (pred - yte) / np.where(np.abs(yte) < 0.1, 1.0, yte))))
+    assert abs(mapes["random"] - mapes["weighted_quantile"]) < \
+        0.3 * max(mapes.values()) + 0.05, mapes
+
+
+def test_random_proposal_cheaper_than_gk():
+    """T(S) < T(Q) — the paper's timing claim.  GK summary is the honest
+    streaming baseline; random sampling must beat it comfortably."""
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(60_000, 8)).astype(np.float32)
+    from repro.core import proposal
+    key = jax.random.PRNGKey(0)
+    # warm up jit
+    jax.block_until_ready(proposal.random_candidates(key, x, 16))
+    t0 = time.perf_counter()
+    for i in range(3):
+        jax.block_until_ready(proposal.random_candidates(
+            jax.random.fold_in(key, i), x, 16))
+    t_random = (time.perf_counter() - t0) / 3
+    t0 = time.perf_counter()
+    proposal.gk_quantile_candidates(x[:20_000], 16)   # 1/3 of the rows!
+    t_gk = time.perf_counter() - t0
+    assert t_random < t_gk, (t_random, t_gk)
+
+
+def test_variance_across_seeds_is_small():
+    """Paper: 'variance of accuracies across runs < 0.001'."""
+    xtr, ytr, xte, yte, _ = make_dataset("susy-like", 6000, 1500)
+    accs = []
+    for seed in range(3):
+        cfg = boosting.GBDTConfig(n_trees=8, max_depth=4, n_candidates=16)
+        m = boosting.fit(xtr, ytr, cfg, jax.random.PRNGKey(seed))
+        accs.append(boosting.accuracy(m, xte, yte))
+    assert float(np.var(accs)) < 0.001, accs

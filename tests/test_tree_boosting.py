@@ -1,0 +1,102 @@
+"""Tree builder + GBDT trainer behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import binning, boosting, proposal, tree as tree_lib
+
+
+def _toy(n=4000, f=6, seed=0):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (n, f))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (f,))
+    y = (x @ w > 0).astype(jnp.float32)
+    return x, y
+
+
+def test_single_tree_separates_axis_aligned():
+    """A depth-1 tree must find an axis-aligned split exactly."""
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (2000, 3))
+    y = (x[:, 1] > 0.37).astype(jnp.float32)
+    g = (jax.nn.sigmoid(jnp.zeros(2000)) - y).astype(jnp.float32)
+    h = jnp.full((2000,), 0.25, jnp.float32)
+    c = proposal.propose("exact", x, 64)
+    bins = binning.bin_features(x, c)
+    t = tree_lib.build_tree(bins, jnp.stack([g, h], 1), c,
+                            max_depth=1, nbins=65)
+    assert int(t.feature[0]) == 1
+    assert abs(float(t.threshold[0]) - 0.37) < 0.1
+    # left leaf negative class -> negative... leaf values have opposite
+    # signs for the two classes
+    assert float(t.leaf_value[0]) * float(t.leaf_value[1]) < 0
+
+
+def test_predict_binned_equals_raw():
+    x, y = _toy()
+    cfg = boosting.GBDTConfig(n_trees=3, max_depth=4, n_candidates=16)
+    m = boosting.fit(x, y, cfg)
+    c = m.candidates[-1]
+    bins = binning.bin_features(x, c)
+    for t in m.trees[-1:]:
+        pb = tree_lib.predict_binned(t, bins, max_depth=4)
+        pr = tree_lib.predict_raw(t, x, max_depth=4)
+        np.testing.assert_allclose(np.asarray(pb), np.asarray(pr))
+
+
+def test_boosting_loss_decreases():
+    x, y = _toy()
+    cfg = boosting.GBDTConfig(n_trees=8, max_depth=4, n_candidates=16)
+    m = boosting.fit(x, y, cfg)
+    # train logloss after each prefix of trees must be non-increasing
+    margins = jnp.full((x.shape[0],), m.base_score)
+    losses = []
+    for t in m.trees:
+        margins = margins + cfg.learning_rate * tree_lib.predict_raw(
+            t, x, max_depth=cfg.max_depth)
+        p = jax.nn.sigmoid(margins)
+        losses.append(float(-jnp.mean(y * jnp.log(p + 1e-9)
+                                      + (1 - y) * jnp.log(1 - p + 1e-9))))
+    assert losses[-1] < losses[0]
+    assert losses == sorted(losses, reverse=True) or \
+        losses[-1] < losses[0] * 0.9
+
+
+def test_regression_mse_decreases():
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, (3000, 5))
+    y = x[:, 0] * 2 + jnp.sin(3 * x[:, 1])
+    cfg = boosting.GBDTConfig(n_trees=10, max_depth=4, n_candidates=16,
+                              objective="mse")
+    m = boosting.fit(x, y, cfg)
+    pred = m.predict(x)
+    mse = float(jnp.mean((pred - y) ** 2))
+    base = float(jnp.mean((y - y.mean()) ** 2))
+    assert mse < 0.5 * base
+
+
+def test_random_matches_quantile_accuracy():
+    """The paper's Table 2 claim at unit-test scale."""
+    x, y = _toy(6000, 8, seed=5)
+    xtr, ytr, xte, yte = x[:5000], y[:5000], x[5000:], y[5000:]
+    accs = {}
+    for s in ("random", "weighted_quantile"):
+        cfg = boosting.GBDTConfig(n_trees=8, max_depth=4, n_candidates=16,
+                                  strategy=s)
+        m = boosting.fit(xtr, ytr, cfg, jax.random.PRNGKey(0))
+        accs[s] = boosting.accuracy(m, xte, yte)
+    assert abs(accs["random"] - accs["weighted_quantile"]) < 0.03, accs
+
+
+def test_min_child_weight_blocks_splits():
+    x, y = _toy(500, 3)
+    cfg = boosting.GBDTConfig(n_trees=1, max_depth=3, n_candidates=8,
+                              min_child_weight=1e9)
+    m = boosting.fit(x, y, cfg)
+    t = m.trees[0]
+    assert bool(jnp.all(t.feature == -1))          # all passthrough
+    # passthrough tree predicts a constant
+    pr = tree_lib.predict_raw(t, x, max_depth=3)
+    assert float(jnp.std(pr)) == pytest.approx(0.0, abs=1e-6)
