@@ -3,7 +3,9 @@
 Each worker samples candidates from its local shard at data-read time;
 per boosting round the candidate pools are all-gathered and resampled
 with a shared key (the paper's AllReduce-combine-resample); gradient
-histograms are psum'd inside the tree builder.
+histograms are psum'd inside the tree builder.  The per-worker loop is
+the same single-compile ``lax.scan`` round runner as the single-host
+trainer, so each worker traces its round step exactly once.
 
 Run:
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \

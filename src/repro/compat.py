@@ -1,0 +1,55 @@
+"""Cross-version JAX compatibility shims.
+
+The library targets the newest public APIs (``jax.shard_map``,
+``jax.set_mesh``) but must also run on the 0.4.x line installed in the
+benchmark container, where the same functionality lives under
+``jax.experimental.shard_map`` (with ``check_rep`` instead of
+``check_vma``) and the global-mesh context is ``Mesh.__enter__``.
+
+Call sites import from here only:
+
+    from repro import compat
+    compat.shard_map(fn, mesh=mesh, in_specs=..., out_specs=...)
+    with compat.use_mesh(mesh): ...
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map`` with graceful fallback to the experimental API.
+
+    ``check_vma`` maps onto the older ``check_rep`` flag — both toggle
+    the replication/varying-manual-axes checker, which rejects some
+    valid collective programs on older releases, so we default it off.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check_vma)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    """Install ``mesh`` as the ambient mesh for the enclosed trace.
+
+    Newest JAX: ``jax.set_mesh`` context manager.  Mid vintages:
+    ``jax.sharding.use_mesh``.  0.4.x: the legacy ``with mesh:`` global
+    mesh context (sufficient for jit-with-NamedSharding lowering, which
+    is all the launcher needs).
+    """
+    if hasattr(jax, "set_mesh"):
+        with jax.set_mesh(mesh):
+            yield
+    elif hasattr(jax.sharding, "use_mesh"):
+        with jax.sharding.use_mesh(mesh):
+            yield
+    else:
+        with mesh:
+            yield

@@ -1,23 +1,40 @@
 """Gradient-boosted decision trees over the binned tree builder.
 
-Single-host reference trainer (the distributed shard_map trainer lives in
-distributed.py and reuses the same tree builder).  Mirrors the paper's
-experimental setup: proposal strategy is pluggable per-round
+Single-host trainer (the distributed shard_map trainer lives in
+distributed.py and reuses the same scanned round step).  Mirrors the
+paper's experimental setup: proposal strategy is pluggable per-round
 ('random' = the paper; 'gk_quantile' / 'weighted_quantile' /
 'uniform_range' = the data-faithful baselines; 'exact' = greedy).
+
+The hot loop is a single-compile ``lax.scan`` over boosting rounds: one
+round step (grad/hess -> propose -> bin -> build_tree -> margin update)
+is traced ONCE and scanned over pre-split per-round PRNG keys, with the
+margin buffer donated into the jit so XLA updates it in place.  Trees
+accumulate as a static-shaped struct-of-arrays :class:`tree.Forest`
+(the scan's stacked per-round output), so trace+compile cost is O(1) in
+``n_trees`` and no host round-trip happens between rounds.  The
+jit-able proposal strategies (random / weighted_quantile /
+uniform_range) re-propose natively inside the scan; the host-side
+strategies (gk_quantile / exact) are x-only — identical candidates
+every round — and are proposed once outside it.
+
+:func:`fit_reference` keeps the original per-round Python loop as the
+semantic oracle; tests assert the scanned trainer reproduces it
+tree-for-tree on a fixed seed.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from . import binning, proposal, tree as tree_lib
+from ..kernels import ops
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,18 +59,24 @@ class GBDTConfig:
 @dataclasses.dataclass
 class GBDTModel:
     config: GBDTConfig
-    trees: list[tree_lib.Tree]
+    forest: tree_lib.Forest             # stacked (n_trees, ...) ensemble
     base_score: float
-    candidates: list[jax.Array]         # per round (f, k)
-    proposal_seconds: float = 0.0       # time spent proposing (Table 2 T col)
+    candidates: jax.Array               # (rounds_proposed, f, k)
+    proposal_seconds: float = 0.0       # host-side strategies only; the
+    #                                     scanned strategies propose
+    #                                     inside the compiled loop
     fit_seconds: float = 0.0
 
+    @property
+    def trees(self) -> list[tree_lib.Tree]:
+        """Per-tree views (back-compat with the list-of-trees API)."""
+        return tree_lib.forest_trees(self.forest)
+
     def predict_margin(self, x: jax.Array) -> jax.Array:
-        out = jnp.full((x.shape[0],), self.base_score, jnp.float32)
-        for t in self.trees:
-            out = out + self.config.learning_rate * tree_lib.predict_raw(
-                t, x, max_depth=self.config.max_depth)
-        return out
+        x = jnp.asarray(x, jnp.float32)
+        total = tree_lib.forest_predict_raw(
+            self.forest, x, max_depth=self.config.max_depth)
+        return self.base_score + self.config.learning_rate * total
 
     def predict(self, x: jax.Array) -> jax.Array:
         m = self.predict_margin(x)
@@ -79,13 +102,134 @@ def _base_score(y: jax.Array, objective: str) -> float:
     return float(jnp.mean(y))
 
 
+def round_keys(key: jax.Array, n_trees: int, offset: int = 0) -> jax.Array:
+    """Pre-split per-round keys, identical to fold_in(key, offset + r)."""
+    return jax.vmap(lambda r: jax.random.fold_in(key, r))(
+        offset + jnp.arange(n_trees))
+
+
+# ---------------------------------------------------------------------------
+# Round-step trace accounting.
+#
+# The Python body of the scanned round step runs exactly once per trace
+# of the surrounding jit, so a module-level counter bumped there IS the
+# lowering count of the hot loop.  tests/test_retrace.py asserts it does
+# not grow with n_trees.
+# ---------------------------------------------------------------------------
+
+_round_traces = 0
+
+
+def _bump_round_traces() -> None:
+    global _round_traces
+    _round_traces += 1
+
+
+def round_trace_count() -> int:
+    """How many times a boosting round step has been traced (all trainers)."""
+    return _round_traces
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "backend"),
+                   donate_argnums=(3,))
+def _fit_scanned(x, y, keys, margin0, fixed_c, *, cfg: GBDTConfig,
+                 backend: str):
+    """Single-compile boosting: lax.scan of one round step over rounds.
+
+    margin0 is donated — the round runner's carry buffer is updated in
+    place rather than double-buffered at the jit boundary.
+
+    Returns (forest, candidates, margin); candidates has a leading axis
+    of n_trees when re-proposing inside the scan, else 1.
+    """
+    def grow(margin, bins, cands):
+        g, h = grad_hess(margin, y, cfg.objective)
+        t, node = tree_lib.build_tree(
+            bins, jnp.stack([g, h], 1), cands,
+            max_depth=cfg.max_depth, nbins=cfg.nbins, l2=cfg.l2,
+            gamma=cfg.gamma, min_child_weight=cfg.min_child_weight,
+            backend=backend, return_leaf_nodes=True)
+        # growth already routed every row to its leaf — gather the leaf
+        # values directly instead of re-descending with predict_binned
+        margin = margin + cfg.learning_rate * t.leaf_value[node]
+        return margin, t
+
+    in_scan = cfg.repropose_each_round and fixed_c is None
+    if in_scan:
+        def round_step(margin, key_r):
+            _bump_round_traces()
+            _, h = grad_hess(margin, y, cfg.objective)
+            c = proposal.propose_traced(cfg.strategy, x, cfg.n_candidates,
+                                        key_r, h)
+            bins = binning.bin_features(x, c)
+            margin, t = grow(margin, bins, c)
+            return margin, (t, c)
+
+        margin, (trees, cands) = jax.lax.scan(round_step, margin0, keys)
+        return tree_lib.Forest(*trees), cands, margin
+
+    # fixed candidate grid: host-side strategies (candidates passed in)
+    # or repropose_each_round=False (proposed once from round-0 stats)
+    if fixed_c is None:
+        _, h0 = grad_hess(margin0, y, cfg.objective)
+        fixed_c = proposal.propose_traced(cfg.strategy, x, cfg.n_candidates,
+                                          keys[0], h0)
+    bins = binning.bin_features(x, fixed_c)
+
+    def round_step(margin, _key_r):
+        _bump_round_traces()
+        margin, t = grow(margin, bins, fixed_c)
+        return margin, t
+
+    margin, trees = jax.lax.scan(round_step, margin0, keys)
+    return tree_lib.Forest(*trees), fixed_c[None], margin
+
+
 def fit(x: jax.Array, y: jax.Array, cfg: GBDTConfig,
         key: jax.Array | None = None) -> GBDTModel:
-    """Train a GBDT model on a single host.
+    """Train a GBDT model on a single host (single-compile scan trainer).
 
     Args:
       x: (n, f) float32 features.
       y: (n,) labels ({0,1} for logistic, real for mse).
+
+    Reproduces :func:`fit_reference` tree-for-tree on the same key.
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    t_fit0 = time.perf_counter()
+
+    base = _base_score(y, cfg.objective)
+    margin0 = jnp.full((x.shape[0],), base, jnp.float32)
+    keys = round_keys(key, cfg.n_trees)
+    backend = ops.resolve(cfg.backend)
+
+    fixed_c = None
+    proposal_s = 0.0
+    if cfg.strategy not in proposal.TRACEABLE:
+        # host-side strategies are x-only: one proposal serves all rounds
+        t0 = time.perf_counter()
+        fixed_c = jax.block_until_ready(jnp.asarray(proposal.propose(
+            cfg.strategy, x, cfg.n_candidates,
+            key=jax.random.fold_in(key, 0))))
+        proposal_s = time.perf_counter() - t0
+
+    forest, cands, margin = _fit_scanned(x, y, keys, margin0, fixed_c,
+                                         cfg=cfg, backend=backend)
+    jax.block_until_ready(margin)
+    return GBDTModel(cfg, forest, base, cands,
+                     proposal_seconds=proposal_s,
+                     fit_seconds=time.perf_counter() - t_fit0)
+
+
+def fit_reference(x: jax.Array, y: jax.Array, cfg: GBDTConfig,
+                  key: jax.Array | None = None) -> GBDTModel:
+    """The original per-round Python loop (one dispatch + host sync per
+    round, O(n_trees) trace/compile).  Kept as the semantic oracle for
+    the scanned trainer and as the bench baseline — not the fast path.
     """
     if key is None:
         key = jax.random.PRNGKey(0)
@@ -121,7 +265,8 @@ def fit(x: jax.Array, y: jax.Array, cfg: GBDTConfig,
             t, bins, max_depth=cfg.max_depth)
 
     margin = jax.block_until_ready(margin)
-    return GBDTModel(cfg, trees, base, cands,
+    return GBDTModel(cfg, tree_lib.forest_from_trees(trees), base,
+                     jnp.stack(cands),
                      proposal_seconds=proposal_s,
                      fit_seconds=time.perf_counter() - t_fit0)
 

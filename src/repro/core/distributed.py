@@ -10,6 +10,14 @@ Mapping from the paper's Rabit/AllReduce world to JAX:
   * histogram AllReduce -> lax.psum of the (node, feature, bin) panels
     inside the tree builder (the classic distributed-XGBoost pattern).
 
+The per-worker boosting loop is the same single-compile ``lax.scan``
+round step as :func:`boosting.fit`: the round body (grad/hess ->
+propose -> bin -> build_tree -> margin update, with its collectives)
+is traced once and scanned over pre-split round keys, so the whole
+n_trees-round training job is ONE compiled program per worker instead
+of an unrolled O(n_trees) graph.  ``_worker_fit_reference`` keeps the
+unrolled loop as the semantic oracle.
+
 The quantile baseline is also provided in distributed form (local sketch ->
 all_gather -> merge), so Table-2-style comparisons run under the same
 collective schedule.
@@ -25,6 +33,8 @@ from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import binning, boosting, proposal, sketch, tree as tree_lib
+from .. import compat
+from ..kernels import ops
 
 
 def merge_quantile_gathered(gathered: jax.Array, hess_hint: jax.Array | None,
@@ -41,13 +51,32 @@ def merge_quantile_gathered(gathered: jax.Array, hess_hint: jax.Array | None,
     return pool[:, idx]
 
 
-def _worker_fit(x_local, y_local, key, *, cfg: boosting.GBDTConfig,
-                axis: str, n_global: int):
-    """Traced per-worker trainer; runs identically on every 'data' slice."""
-    psum = lambda a: lax.psum(a, axis)
+def _worker_propose(cfg: boosting.GBDTConfig, key_r, x_local, hess,
+                    local_pool, axis: str):
+    """One round's distributed proposal — traceable for every supported
+    strategy, so it can live inside the scanned round step."""
+    if cfg.strategy == "random":
+        gathered = lax.all_gather(local_pool, axis)              # (W, f, b)
+        return proposal.resample_gathered(key_r, gathered, cfg.n_candidates)
+    if cfg.strategy in ("weighted_quantile", "gk_quantile"):
+        local_c = proposal.weighted_quantile_candidates(
+            x_local,
+            hess if cfg.strategy == "weighted_quantile"
+            else jnp.ones_like(hess),
+            cfg.n_candidates)
+        gathered = lax.all_gather(local_c, axis)
+        return merge_quantile_gathered(gathered, None, cfg.n_candidates)
+    if cfg.strategy == "uniform_range":
+        lo = lax.pmin(jnp.min(x_local, axis=0), axis)
+        hi = lax.pmax(jnp.max(x_local, axis=0), axis)
+        t = jnp.arange(1, cfg.n_candidates + 1) / (cfg.n_candidates + 1)
+        return lo[:, None] + (hi - lo)[:, None] * t[None, :]
+    raise ValueError(f"strategy {cfg.strategy!r} has no distributed form")
 
-    # global base score
-    ysum = psum(jnp.sum(y_local))
+
+def _worker_base_and_pool(x_local, y_local, key, *, cfg, axis, n_global):
+    """Shared preamble: global base score + 'data read' candidate pool."""
+    ysum = lax.psum(jnp.sum(y_local), axis)
     if cfg.objective == "logistic":
         p = jnp.clip(ysum / n_global, 1e-6, 1 - 1e-6)
         base = jnp.log(p / (1 - p))
@@ -58,7 +87,65 @@ def _worker_fit(x_local, y_local, key, *, cfg: boosting.GBDTConfig,
     widx = lax.axis_index(axis)
     local_pool = proposal.random_candidates_local(
         jax.random.fold_in(key, widx), x_local, cfg.n_candidates)
+    return base, local_pool
 
+
+def _worker_fit(x_local, y_local, key, *, cfg: boosting.GBDTConfig,
+                axis: str, n_global: int, backend: str):
+    """Traced per-worker trainer; runs identically on every 'data' slice.
+
+    One lax.scan over rounds — the round step (with its all_gather /
+    psum collectives) compiles once regardless of cfg.n_trees.
+    """
+    base, local_pool = _worker_base_and_pool(
+        x_local, y_local, key, cfg=cfg, axis=axis, n_global=n_global)
+    margin0 = jnp.full((x_local.shape[0],), base, jnp.float32)
+    keys = boosting.round_keys(key, cfg.n_trees, offset=10_000)
+
+    def grow(margin, bins, cands):
+        g, h = boosting.grad_hess(margin, y_local, cfg.objective)
+        t, node = tree_lib.build_tree(
+            bins, jnp.stack([g, h], 1), cands,
+            max_depth=cfg.max_depth, nbins=cfg.nbins, l2=cfg.l2,
+            gamma=cfg.gamma, min_child_weight=cfg.min_child_weight,
+            backend=backend, axis_name=axis, return_leaf_nodes=True)
+        # growth already routed every local row to its leaf — gather the
+        # leaf values directly instead of re-descending the tree
+        margin = margin + cfg.learning_rate * t.leaf_value[node]
+        return margin, t
+
+    if cfg.repropose_each_round:
+        def round_step(margin, key_r):
+            boosting._bump_round_traces()
+            _, h = boosting.grad_hess(margin, y_local, cfg.objective)
+            c = _worker_propose(cfg, key_r, x_local, h, local_pool, axis)
+            bins = binning.bin_features(x_local, c)
+            margin, t = grow(margin, bins, c)
+            return margin, (t, c)
+
+        margin, (trees, cands) = lax.scan(round_step, margin0, keys)
+        return tree_lib.Forest(*trees), cands, base, margin
+
+    _, h0 = boosting.grad_hess(margin0, y_local, cfg.objective)
+    c0 = _worker_propose(cfg, keys[0], x_local, h0, local_pool, axis)
+    bins0 = binning.bin_features(x_local, c0)
+
+    def round_step(margin, _key_r):
+        boosting._bump_round_traces()
+        margin, t = grow(margin, bins0, c0)
+        return margin, t
+
+    margin, trees = lax.scan(round_step, margin0, keys)
+    return tree_lib.Forest(*trees), c0[None], base, margin
+
+
+def _worker_fit_reference(x_local, y_local, key, *,
+                          cfg: boosting.GBDTConfig, axis: str,
+                          n_global: int, backend: str):
+    """The original unrolled per-worker loop (O(n_trees) traced graph).
+    Kept as the semantic oracle for the scanned worker."""
+    base, local_pool = _worker_base_and_pool(
+        x_local, y_local, key, cfg=cfg, axis=axis, n_global=n_global)
     margin = jnp.full((x_local.shape[0],), base, jnp.float32)
     trees = []
     cands = []
@@ -67,52 +154,33 @@ def _worker_fit(x_local, y_local, key, *, cfg: boosting.GBDTConfig,
     for r in range(cfg.n_trees):
         g, h = boosting.grad_hess(margin, y_local, cfg.objective)
         if cfg.repropose_each_round or r == 0:
-            if cfg.strategy == "random":
-                gathered = lax.all_gather(local_pool, axis)      # (W, f, b)
-                c = proposal.resample_gathered(
-                    jax.random.fold_in(key, 10_000 + r), gathered,
-                    cfg.n_candidates)
-            elif cfg.strategy in ("weighted_quantile", "gk_quantile"):
-                local_c = proposal.weighted_quantile_candidates(
-                    x_local,
-                    h if cfg.strategy == "weighted_quantile"
-                    else jnp.ones_like(h),
-                    cfg.n_candidates)
-                gathered = lax.all_gather(local_c, axis)
-                c = merge_quantile_gathered(gathered, None, cfg.n_candidates)
-            elif cfg.strategy == "uniform_range":
-                lo = psum(jnp.zeros(())) * 0 + lax.pmin(
-                    jnp.min(x_local, axis=0), axis)
-                hi = lax.pmax(jnp.max(x_local, axis=0), axis)
-                t = jnp.arange(1, cfg.n_candidates + 1) / (cfg.n_candidates + 1)
-                c = lo[:, None] + (hi - lo)[:, None] * t[None, :]
-            else:
-                raise ValueError(
-                    f"strategy {cfg.strategy!r} has no distributed form")
+            c = _worker_propose(cfg, jax.random.fold_in(key, 10_000 + r),
+                                x_local, h, local_pool, axis)
             bins = binning.bin_features(x_local, c)
             cands.append(c)
-
         t = tree_lib.build_tree(
             bins, jnp.stack([g, h], 1), cands[-1],
             max_depth=cfg.max_depth, nbins=cfg.nbins, l2=cfg.l2,
             gamma=cfg.gamma, min_child_weight=cfg.min_child_weight,
-            backend=cfg.backend, axis_name=axis)
+            backend=backend, axis_name=axis)
         trees.append(t)
         margin = margin + cfg.learning_rate * tree_lib.predict_binned(
             t, bins, max_depth=cfg.max_depth)
 
-    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
-    cands_arr = jnp.stack(cands)
-    return stacked, cands_arr, base, margin
+    return (tree_lib.forest_from_trees(trees), jnp.stack(cands), base,
+            margin)
 
 
 def fit_distributed(x, y, cfg: boosting.GBDTConfig, mesh: Mesh,
                     key: jax.Array | None = None,
-                    axis: str = "data") -> boosting.GBDTModel:
+                    axis: str = "data",
+                    reference: bool = False) -> boosting.GBDTModel:
     """Train a GBDT with rows sharded over ``axis`` of ``mesh``.
 
     Semantics match :func:`boosting.fit` up to the candidate sets (each
     worker samples locally, then the union is resampled — Algorithm 1).
+    ``reference=True`` runs the unrolled oracle loop instead of the
+    scanned trainer (tests only).
     """
     if key is None:
         key = jax.random.PRNGKey(0)
@@ -131,15 +199,14 @@ def fit_distributed(x, y, cfg: boosting.GBDTConfig, mesh: Mesh,
     xs = jax.device_put(x, NamedSharding(mesh, P(axis, None)))
     ys = jax.device_put(y, NamedSharding(mesh, P(axis)))
 
-    fn = functools.partial(_worker_fit, cfg=cfg, axis=axis, n_global=n)
-    stacked, cands, base, _margin = jax.jit(jax.shard_map(
+    worker = _worker_fit_reference if reference else _worker_fit
+    fn = functools.partial(worker, cfg=cfg, axis=axis, n_global=n,
+                           backend=ops.resolve(cfg.backend))
+    forest, cands, base, _margin = jax.jit(compat.shard_map(
         fn, mesh=mesh,
         in_specs=(P(axis, None), P(axis), P()),
         out_specs=(P(), P(), P(), P(axis)),
         check_vma=False,
     ))(xs, ys, key)
 
-    trees = [jax.tree.map(lambda a, i=i: a[i], stacked)
-             for i in range(cfg.n_trees)]
-    cand_list = [cands[i] for i in range(cands.shape[0])]
-    return boosting.GBDTModel(cfg, trees, float(base), cand_list)
+    return boosting.GBDTModel(cfg, forest, float(base), cands)

@@ -27,6 +27,13 @@ from . import sketch
 Strategy = Literal["random", "gk_quantile", "weighted_quantile",
                    "uniform_range", "exact"]
 
+# Strategies that lower to pure jax ops, so the boosting trainers can
+# re-propose *inside* a lax.scan round step.  The host-side strategies
+# ('gk_quantile', 'exact') are x-only — their candidates are identical
+# every round — so the trainers compute them once outside the scan.
+TRACEABLE: tuple[str, ...] = ("random", "weighted_quantile",
+                              "uniform_range")
+
 
 # ---------------------------------------------------------------------------
 # The paper's method: uniform random sampling (jit-able, O(n) per feature).
@@ -133,6 +140,24 @@ def exact_candidates(x: np.ndarray, k: int) -> np.ndarray:
 # ---------------------------------------------------------------------------
 # Unified front end.
 # ---------------------------------------------------------------------------
+
+def propose_traced(strategy: Strategy, x: jax.Array, k: int,
+                   key: jax.Array, hess: jax.Array) -> jax.Array:
+    """Proposal dispatch restricted to :data:`TRACEABLE` strategies.
+
+    Safe to call under jit / inside a ``lax.scan`` body (``key`` and
+    ``hess`` may be tracers); the strategy itself is static.  Matches
+    :func:`propose` value-for-value on the shared strategies.
+    """
+    if strategy == "random":
+        return random_candidates(key, x, k)
+    if strategy == "weighted_quantile":
+        return weighted_quantile_candidates(x, hess, k)
+    if strategy == "uniform_range":
+        return uniform_range_candidates(x, k)
+    raise ValueError(f"strategy {strategy!r} is not traceable "
+                     f"(TRACEABLE={TRACEABLE})")
+
 
 def propose(strategy: Strategy, x, k: int, *, key: jax.Array | None = None,
             hess: jax.Array | None = None) -> jnp.ndarray:

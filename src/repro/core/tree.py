@@ -36,18 +36,44 @@ class Tree(NamedTuple):
     leaf_value: jax.Array  # (2^depth,) float32
 
 
+class Forest(NamedTuple):
+    """A boosted ensemble as a struct-of-arrays: every field of Tree
+    stacked along a leading round axis.  Static-shaped in (n_trees,
+    max_depth), so it can be the per-round output of a ``lax.scan`` and
+    the input of a single-compile vectorized predictor."""
+    feature: jax.Array     # (T, 2^depth - 1) int32
+    split_bin: jax.Array   # (T, 2^depth - 1) int32
+    threshold: jax.Array   # (T, 2^depth - 1) float32
+    leaf_value: jax.Array  # (T, 2^depth) float32
+
+    @property
+    def n_trees(self) -> int:
+        return self.feature.shape[0]
+
+
+def forest_from_trees(trees: list[Tree]) -> Forest:
+    """Stack a Python list of trees (the reference-loop output)."""
+    return Forest(*(jnp.stack(a) for a in zip(*trees)))
+
+
+def forest_trees(forest: Forest) -> list[Tree]:
+    """Per-tree views of a forest (host-side convenience/back-compat)."""
+    return [Tree(*(a[i] for a in forest)) for i in range(forest.n_trees)]
+
+
 def _level_slice(depth: int) -> slice:
     return slice(2 ** depth - 1, 2 ** (depth + 1) - 1)
 
 
 @functools.partial(jax.jit, static_argnames=(
     "max_depth", "nbins", "l2", "gamma", "min_child_weight", "backend",
-    "axis_name"))
+    "axis_name", "return_leaf_nodes"))
 def build_tree(bins: jax.Array, gh: jax.Array, candidates: jax.Array, *,
                max_depth: int, nbins: int, l2: float = 1.0,
                gamma: float = 0.0, min_child_weight: float = 1e-6,
                backend: str = "auto",
-               axis_name: str | None = None) -> Tree:
+               axis_name: str | None = None,
+               return_leaf_nodes: bool = False):
     """Grow one tree on binned data.
 
     Args:
@@ -58,9 +84,14 @@ def build_tree(bins: jax.Array, gh: jax.Array, candidates: jax.Array, *,
       axis_name: if set, every histogram is lax.psum'd over this mesh
         axis (distributed-XGBoost histogram AllReduce inside shard_map);
         None = single host.
+      return_leaf_nodes: also return each row's final leaf id.  Growth
+        already routes every row to its leaf, so the scanned boosting
+        trainers read the margin update as ``leaf_value[node]`` instead
+        of re-descending the tree with predict_binned.
 
     Returns:
-      A :class:`Tree`.
+      A :class:`Tree`, or ``(Tree, node)`` with ``node`` the (n,) int32
+      leaf assignment when ``return_leaf_nodes`` is set.
     """
     psum = (None if axis_name is None
             else lambda a: jax.lax.psum(a, axis_name))
@@ -111,12 +142,14 @@ def build_tree(bins: jax.Array, gh: jax.Array, candidates: jax.Array, *,
     if psum is not None:
         seg = psum(seg)
     leaf_value = -seg[:, 0] / (seg[:, 1] + l2)
-    return Tree(feature, split_bin, threshold, leaf_value.astype(jnp.float32))
+    tree = Tree(feature, split_bin, threshold,
+                leaf_value.astype(jnp.float32))
+    if return_leaf_nodes:
+        return tree, node
+    return tree
 
 
-@functools.partial(jax.jit, static_argnames=("max_depth",))
-def predict_binned(tree: Tree, bins: jax.Array, *, max_depth: int) -> jax.Array:
-    """Evaluate one tree on binned features; returns (n,) leaf values."""
+def _descend_binned(tree: Tree, bins: jax.Array, max_depth: int) -> jax.Array:
     n = bins.shape[0]
     node = jnp.zeros((n,), jnp.int32)          # level-local id
     for depth in range(max_depth):
@@ -129,9 +162,7 @@ def predict_binned(tree: Tree, bins: jax.Array, *, max_depth: int) -> jax.Array:
     return tree.leaf_value[node]
 
 
-@functools.partial(jax.jit, static_argnames=("max_depth",))
-def predict_raw(tree: Tree, x: jax.Array, *, max_depth: int) -> jax.Array:
-    """Evaluate one tree on raw features (x <= threshold goes left)."""
+def _descend_raw(tree: Tree, x: jax.Array, max_depth: int) -> jax.Array:
     n = x.shape[0]
     node = jnp.zeros((n,), jnp.int32)
     for depth in range(max_depth):
@@ -142,3 +173,44 @@ def predict_raw(tree: Tree, x: jax.Array, *, max_depth: int) -> jax.Array:
         go_left = xv <= thr
         node = node * 2 + jnp.where(go_left, 0, 1)
     return tree.leaf_value[node]
+
+
+@functools.partial(jax.jit, static_argnames=("max_depth",))
+def predict_binned(tree: Tree, bins: jax.Array, *, max_depth: int) -> jax.Array:
+    """Evaluate one tree on binned features; returns (n,) leaf values."""
+    return _descend_binned(tree, bins, max_depth)
+
+
+@functools.partial(jax.jit, static_argnames=("max_depth",))
+def predict_raw(tree: Tree, x: jax.Array, *, max_depth: int) -> jax.Array:
+    """Evaluate one tree on raw features (x <= threshold goes left)."""
+    return _descend_raw(tree, x, max_depth)
+
+
+@functools.partial(jax.jit, static_argnames=("max_depth",))
+def forest_predict_raw(forest: Forest, x: jax.Array, *,
+                       max_depth: int) -> jax.Array:
+    """Sum of per-tree leaf values over a whole forest: one compile for
+    any n_trees, O(n) working memory (scan carries only the accumulator).
+
+    Returns the *unscaled* ensemble sum; the caller applies learning
+    rate and base score.
+    """
+    def body(acc, t):
+        return acc + _descend_raw(Tree(*t), x, max_depth), None
+
+    acc0 = jnp.zeros((x.shape[0],), jnp.float32)
+    acc, _ = jax.lax.scan(body, acc0, forest)
+    return acc
+
+
+@functools.partial(jax.jit, static_argnames=("max_depth",))
+def forest_predict_binned(forest: Forest, bins: jax.Array, *,
+                          max_depth: int) -> jax.Array:
+    """As :func:`forest_predict_raw` but on pre-binned features."""
+    def body(acc, t):
+        return acc + _descend_binned(Tree(*t), bins, max_depth), None
+
+    acc0 = jnp.zeros((bins.shape[0],), jnp.float32)
+    acc, _ = jax.lax.scan(body, acc0, forest)
+    return acc

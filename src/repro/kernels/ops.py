@@ -20,14 +20,31 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def resolve(backend: str) -> str:
+    """Resolve 'auto' to a concrete backend name.
+
+    The scanned trainers call this once per fit, outside traced code, so
+    the choice is a static constant of the compiled program (and
+    ``jax.default_backend()`` is never consulted mid-trace).  On CPU
+    'auto' picks 'packed' — the complex64-scatter histogram, bit-exact
+    vs the 'ref' oracle but ~1.6x faster through XLA:CPU.
+    """
+    if backend == "auto":
+        return "pallas" if _on_tpu() else "packed"
+    if backend not in ("pallas", "interpret", "ref", "packed"):
+        raise ValueError(f"unknown backend {backend!r}")
+    return backend
+
+
 def hist(bins, node, gh, *, n_nodes: int, nbins: int,
          backend: str = "auto"):
     """Gradient/hessian histogram: (n_nodes, f, nbins, 2).
 
-    backend: 'auto' | 'pallas' | 'interpret' | 'ref'
+    backend: 'auto' | 'pallas' | 'interpret' | 'ref' | 'packed'
     """
-    if backend == "auto":
-        backend = "pallas" if _on_tpu() else "ref"
+    backend = resolve(backend)
+    if backend == "packed":
+        return ref.hist_packed(bins, node, gh, n_nodes=n_nodes, nbins=nbins)
     if backend == "ref":
         return ref.hist_ref(bins, node, gh, n_nodes=n_nodes, nbins=nbins)
     return hist_pallas(bins, node, gh, n_nodes=n_nodes, nbins=nbins,
@@ -37,9 +54,8 @@ def hist(bins, node, gh, *, n_nodes: int, nbins: int,
 def split_gain(hist_arr, *, l2: float = 1.0, gamma: float = 0.0,
                min_child_weight: float = 1e-6, backend: str = "auto"):
     """Best (gain, bin) per (node, feature) from a histogram."""
-    if backend == "auto":
-        backend = "pallas" if _on_tpu() else "ref"
-    if backend == "ref":
+    backend = resolve(backend)
+    if backend in ("ref", "packed"):    # 'packed' only specialises hist
         return ref.split_gain_ref(hist_arr, l2=l2, gamma=gamma,
                                   min_child_weight=min_child_weight)
     return split_gain_pallas(hist_arr, l2=l2, gamma=gamma,

@@ -8,6 +8,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow        # subprocess retrain, >60s
+
 _SCRIPT = r"""
 import jax, jax.numpy as jnp, numpy as np, json
 from jax.sharding import Mesh

@@ -13,6 +13,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow        # subprocess lower+compile sweep, >60s
+
 _SCRIPT = r"""
 import json
 import repro.configs.base as base

@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # dev dependency; see requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 
 from repro.core import rank_error as re_mod

@@ -1,0 +1,77 @@
+"""Retrace behavior of the scanned boosting trainer.
+
+The whole point of the lax.scan round runner is that trace/compile cost
+is O(1) in n_trees: the round step's Python body executes once per
+trace of the surrounding jit, so ``boosting.round_trace_count()`` is a
+direct lowering count of the hot loop.  Doubling n_trees must not
+increase it, and refitting with unchanged (config, shapes) must hit the
+jit cache and add zero traces.
+
+Where the installed JAX exposes ``jax.monitoring`` event listeners, the
+same invariant is cross-checked against XLA compile events.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import boosting
+
+
+def _toy(n=1000, f=4, seed=0):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (n, f))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (f,))
+    y = (x @ w > 0).astype(jnp.float32)
+    return x, y
+
+
+def _fit_traces(x, y, cfg):
+    before = boosting.round_trace_count()
+    boosting.fit(x, y, cfg, jax.random.PRNGKey(0))
+    return boosting.round_trace_count() - before
+
+
+def test_doubling_n_trees_does_not_retrace_more():
+    x, y = _toy()
+    base = dict(max_depth=4, n_candidates=16)
+    t_small = _fit_traces(x, y, boosting.GBDTConfig(n_trees=4, **base))
+    t_double = _fit_traces(x, y, boosting.GBDTConfig(n_trees=8, **base))
+    t_quad = _fit_traces(x, y, boosting.GBDTConfig(n_trees=16, **base))
+    assert t_small == 1, t_small          # one trace of the round step
+    assert t_double == t_small            # O(1) in n_trees, not O(n_trees)
+    assert t_quad == t_small
+
+
+def test_refit_same_config_hits_jit_cache():
+    x, y = _toy(seed=1)
+    cfg = boosting.GBDTConfig(n_trees=4, max_depth=4, n_candidates=16)
+    _fit_traces(x, y, cfg)                # warm (may or may not be cached)
+    assert _fit_traces(x, y, cfg) == 0    # second fit: zero new traces
+    # a different key is NOT a retrace either (keys are traced values)
+    before = boosting.round_trace_count()
+    boosting.fit(x, y, cfg, jax.random.PRNGKey(99))
+    assert boosting.round_trace_count() - before == 0
+
+
+def test_compile_events_constant_in_n_trees():
+    """Cross-check via jax.monitoring where available: the number of XLA
+    backend compiles triggered by a fit does not grow with n_trees."""
+    if not hasattr(jax, "monitoring") or \
+            not hasattr(jax.monitoring, "register_event_listener"):
+        pytest.skip("jax.monitoring event listeners unavailable")
+    events = []
+    jax.monitoring.register_event_listener(
+        lambda name, **kw: events.append(name))
+
+    def compiles_for(n_trees):
+        x, y = _toy(n=512, f=3, seed=2 + n_trees)   # fresh shapes per call
+        cfg = boosting.GBDTConfig(n_trees=n_trees, max_depth=3,
+                                  n_candidates=8)
+        start = len(events)
+        boosting.fit(x, y, cfg, jax.random.PRNGKey(0))
+        return sum("compile" in e for e in events[start:])
+
+    c4 = compiles_for(4)
+    c8 = compiles_for(8)
+    assert c8 <= c4, (c4, c8)             # doubling rounds: no extra compiles
