@@ -17,6 +17,7 @@ with wall-clock and round-step trace counts written to
 
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import time
@@ -49,7 +50,7 @@ def _hist_onehot(bins, node, gh, n_nodes, nbins):
     return out.reshape(f, n_nodes, nbins, 2).transpose(1, 0, 2, 3)
 
 
-def run(csv_rows: list) -> None:
+def run(csv_rows: list, *, update_json: bool = True) -> None:
     key = jax.random.PRNGKey(0)
     n, f, k = 200_000, 16, 32
     nbins = k + 1
@@ -105,9 +106,26 @@ def run(csv_rows: list) -> None:
                      f"{n / (tp / 1e6) / 1e6:.1f}M rows/s "
                      f"err_vs_v0={errp:.1e}"))
 
-    # whole tree level (hist + split)
+    # v4: level-batched packed scatter — the HistSpec entry point with
+    # L=5 node assignments of the same rows in ONE complex64 scatter
+    # (what a depth-5 grower pays per level, amortised across levels
+    # when node ids are known up front).
+    L = 5
+    node_lvls = jnp.stack([
+        jax.random.randint(jax.random.fold_in(key, 40 + l), (n,), 0,
+                           depth_nodes) for l in range(L)])
+    spec_l = ops.HistSpec(n_nodes=depth_nodes, nbins=nbins, n_levels=L,
+                          backend="packed")
+    fnl = jax.jit(lambda b, nd, s: ops.hist_levels(b, nd, s, spec_l))
+    tl = _time(lambda: jax.block_until_ready(fnl(bins, node_lvls, gh)))
+    csv_rows.append((f"gbdt_step/hist_v4_levels{L}_packed", tl,
+                     f"{tl / L:.0f}us/level "
+                     f"{n * L / (tl / 1e6) / 1e6:.1f}M row-levels/s"))
+
+    # whole tree level (hist + split) through the HistSpec API
+    spec5 = ops.HistSpec(n_nodes=depth_nodes, nbins=nbins, n_levels=5)
     t_level = _time(lambda: jax.block_until_ready(tree_lib.build_tree(
-        bins, gh, cand, max_depth=5, nbins=nbins)))
+        bins, gh, cand, max_depth=5, spec=spec5)))
     csv_rows.append(("gbdt_step/full_tree_depth5", t_level, ""))
 
     # ------------------------------------------------------------------
@@ -149,6 +167,14 @@ def run(csv_rows: list) -> None:
     acc_gap = abs(boosting.accuracy(m_scan, xf, yf)
                   - boosting.accuracy(m_ref, xf, yf))
 
+    if not update_json:
+        csv_rows.append(("gbdt_step/fit50_reference_warm", ref_warm * 1e6,
+                         f"cold={ref_cold:.2f}s"))
+        csv_rows.append(("gbdt_step/fit50_scanned_warm", scan_warm * 1e6,
+                         f"cold={scan_cold:.2f}s traces={scan_traces} "
+                         f"(dry run: BENCH_gbdt_step.json NOT updated)"))
+        return
+
     rec = {
         "workload": {"n": nf, "f": ff, "n_trees": cfg.n_trees,
                      "max_depth": cfg.max_depth,
@@ -175,3 +201,21 @@ def run(csv_rows: list) -> None:
                      f"cold={scan_cold:.2f}s "
                      f"-{rec['warm_reduction_pct']}% wall-clock "
                      f"traces={scan_traces}"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--update", action="store_true",
+                    help="write the fit50 record to BENCH_gbdt_step.json "
+                         "(default: dry run, print timings only)")
+    args = ap.parse_args()
+    rows: list = []
+    run(rows, update_json=args.update)
+    for name, us, note in rows:
+        print(f"{name:40s} {us:12.1f} us  {note}")
+    if args.update:
+        print(f"updated {os.path.abspath(_JSON_PATH)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -23,7 +23,7 @@ import jax                                                      # noqa: E402
 import numpy as np                                              # noqa: E402
 from jax.sharding import Mesh                                   # noqa: E402
 
-from repro.core import boosting, distributed                    # noqa: E402
+import repro                                                    # noqa: E402
 from repro.data import make_dataset                             # noqa: E402
 
 
@@ -33,18 +33,18 @@ def main() -> None:
     mesh = Mesh(np.array(jax.devices()).reshape(-1), ("data",))
 
     for strat in ("random", "weighted_quantile"):
-        cfg = boosting.GBDTConfig(n_trees=10, max_depth=5,
-                                  n_candidates=32, strategy=strat)
-        m = distributed.fit_distributed(xtr, ytr, cfg, mesh,
-                                        jax.random.PRNGKey(0))
-        acc = boosting.accuracy(m, xte, yte)
+        cfg = repro.GBDTConfig(n_trees=10, max_depth=5,
+                               n_candidates=32, strategy=strat)
+        m = repro.fit_distributed(xtr, ytr, cfg, mesh,
+                                  jax.random.PRNGKey(0))
+        acc = repro.accuracy(m, xte, yte)
         print(f"  {strat:18s} acc={acc:.4f}  "
               f"({mesh.shape['data']} workers, Algorithm 1)")
 
     # single-host reference
-    cfg = boosting.GBDTConfig(n_trees=10, max_depth=5, n_candidates=32)
-    m1 = boosting.fit(xtr, ytr, cfg, jax.random.PRNGKey(0))
-    print(f"  {'single-host':18s} acc={boosting.accuracy(m1, xte, yte):.4f}")
+    cfg = repro.GBDTConfig(n_trees=10, max_depth=5, n_candidates=32)
+    m1 = repro.fit(xtr, ytr, cfg, jax.random.PRNGKey(0))
+    print(f"  {'single-host':18s} acc={repro.accuracy(m1, xte, yte):.4f}")
 
 
 if __name__ == "__main__":

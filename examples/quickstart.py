@@ -15,8 +15,10 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 
 import jax
 
-from repro.core import boosting, rank_error
-from repro.data import make_dataset
+import repro
+from repro.core import rank_error                  # research experiment,
+from repro.core.boosting import round_trace_count  # trace diagnostic —
+from repro.data import make_dataset       # all outside the stable surface
 
 
 def main() -> None:
@@ -24,11 +26,11 @@ def main() -> None:
     xtr, ytr, xte, yte, _ = make_dataset("susy-like", 20_000, 5_000)
     results = {}
     for strat in ("random", "weighted_quantile"):
-        cfg = boosting.GBDTConfig(n_trees=20, max_depth=6,
-                                  n_candidates=32, strategy=strat)
-        m = boosting.fit(xtr, ytr, cfg, jax.random.PRNGKey(0))
+        cfg = repro.GBDTConfig(n_trees=20, max_depth=6,
+                               n_candidates=32, strategy=strat)
+        m = repro.fit(xtr, ytr, cfg, jax.random.PRNGKey(0))
         results[strat] = dict(
-            acc=boosting.accuracy(m, xte, yte),
+            acc=repro.accuracy(m, xte, yte),
             fit_s=m.fit_seconds,
             trees=m.forest.n_trees)
     for k, v in results.items():
@@ -37,7 +39,7 @@ def main() -> None:
     gap = abs(results['random']['acc']
               - results['weighted_quantile']['acc'])
     print(f"  accuracy gap = {gap:.4f}  (paper: ~0, Table 2)")
-    print(f"  round-step traces = {boosting.round_trace_count()} "
+    print(f"  round-step traces = {round_trace_count()} "
           f"(one compile per config — O(1) in n_trees)")
 
     print("\n=== 2. Theorem 1: E[rank error] = 1/(k+1) ===")

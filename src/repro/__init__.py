@@ -1,0 +1,31 @@
+"""Stable top-level API.
+
+Everything a user of the GBDT library needs lives here; the module
+layout underneath (``repro.core.*``, ``repro.kernels.*``) is an
+implementation detail and may move between releases.  Examples and
+downstream code should import from ``repro`` directly::
+
+    import repro
+
+    model = repro.fit(x, y, repro.GBDTConfig(strategy="random"))
+    labels = model.predict(x)                     # output="label"
+"""
+
+from .core.boosting import (GBDTConfig, GBDTModel, accuracy, fit,
+                            fit_reference, mape)
+from .core.distributed import fit_distributed
+from .core.tree import Forest, Tree
+from .kernels.ops import HistSpec
+
+__all__ = [
+    "Forest",
+    "GBDTConfig",
+    "GBDTModel",
+    "HistSpec",
+    "Tree",
+    "accuracy",
+    "fit",
+    "fit_distributed",
+    "fit_reference",
+    "mape",
+]

@@ -28,13 +28,14 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from . import binning, proposal, tree as tree_lib
-from ..kernels import ops
+from ..kernels.ops import HistSpec
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,6 +56,14 @@ class GBDTConfig:
     def nbins(self) -> int:
         return self.n_candidates + 1
 
+    def hist_spec(self) -> HistSpec:
+        """The fit-wide histogram workload this config implies: frontier
+        width 2^(max_depth-1) nodes, one batched level per tree depth."""
+        return HistSpec(n_nodes=2 ** max(self.max_depth - 1, 0),
+                        nbins=self.nbins,
+                        n_levels=max(self.max_depth, 1),
+                        backend=self.backend)
+
 
 @dataclasses.dataclass
 class GBDTModel:
@@ -72,17 +81,40 @@ class GBDTModel:
         """Per-tree views (back-compat with the list-of-trees API)."""
         return tree_lib.forest_trees(self.forest)
 
-    def predict_margin(self, x: jax.Array) -> jax.Array:
+    def predict(self, x: jax.Array, *, output: str = "label") -> jax.Array:
+        """Evaluate the ensemble.
+
+        Args:
+          output: 'label' — hard 0/1 for logistic, the predicted value
+            for mse (the default, and what metrics consume); 'margin' —
+            the raw additive score; 'proba' — sigmoid of the margin
+            (logistic only).
+        """
         x = jnp.asarray(x, jnp.float32)
         total = tree_lib.forest_predict_raw(
             self.forest, x, max_depth=self.config.max_depth)
-        return self.base_score + self.config.learning_rate * total
+        m = self.base_score + self.config.learning_rate * total
+        if output == "margin":
+            return m
+        if self.config.objective != "logistic":
+            if output == "proba":
+                raise ValueError(
+                    f"output='proba' needs a logistic objective, got "
+                    f"{self.config.objective!r}")
+            return m                       # 'label' for regression = value
+        p = jax.nn.sigmoid(m)
+        if output == "proba":
+            return p
+        if output == "label":
+            return (p > 0.5).astype(jnp.float32)
+        raise ValueError(f"unknown output {output!r}")
 
-    def predict(self, x: jax.Array) -> jax.Array:
-        m = self.predict_margin(x)
-        if self.config.objective == "logistic":
-            return jax.nn.sigmoid(m)
-        return m
+    def predict_margin(self, x: jax.Array) -> jax.Array:
+        """Deprecated: use ``predict(x, output='margin')``."""
+        warnings.warn(
+            "GBDTModel.predict_margin is deprecated; use "
+            "predict(x, output='margin')", DeprecationWarning, stacklevel=2)
+        return self.predict(x, output="margin")
 
 
 def grad_hess(margin: jax.Array, y: jax.Array, objective: str):
@@ -131,14 +163,16 @@ def round_trace_count() -> int:
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("cfg", "backend"),
+                   static_argnames=("cfg", "spec"),
                    donate_argnums=(3,))
 def _fit_scanned(x, y, keys, margin0, fixed_c, *, cfg: GBDTConfig,
-                 backend: str):
+                 spec: HistSpec):
     """Single-compile boosting: lax.scan of one round step over rounds.
 
     margin0 is donated — the round runner's carry buffer is updated in
-    place rather than double-buffered at the jit boundary.
+    place rather than double-buffered at the jit boundary.  ``spec`` is
+    the fit-wide :class:`HistSpec` (already resolved), the one static
+    handle the tree builder needs instead of loose kernel kwargs.
 
     Returns (forest, candidates, margin); candidates has a leading axis
     of n_trees when re-proposing inside the scan, else 1.
@@ -147,9 +181,9 @@ def _fit_scanned(x, y, keys, margin0, fixed_c, *, cfg: GBDTConfig,
         g, h = grad_hess(margin, y, cfg.objective)
         t, node = tree_lib.build_tree(
             bins, jnp.stack([g, h], 1), cands,
-            max_depth=cfg.max_depth, nbins=cfg.nbins, l2=cfg.l2,
+            max_depth=cfg.max_depth, l2=cfg.l2,
             gamma=cfg.gamma, min_child_weight=cfg.min_child_weight,
-            backend=backend, return_leaf_nodes=True)
+            spec=spec, return_leaf_nodes=True)
         # growth already routed every row to its leaf — gather the leaf
         # values directly instead of re-descending with predict_binned
         margin = margin + cfg.learning_rate * t.leaf_value[node]
@@ -160,8 +194,8 @@ def _fit_scanned(x, y, keys, margin0, fixed_c, *, cfg: GBDTConfig,
         def round_step(margin, key_r):
             _bump_round_traces()
             _, h = grad_hess(margin, y, cfg.objective)
-            c = proposal.propose_traced(cfg.strategy, x, cfg.n_candidates,
-                                        key_r, h)
+            c = proposal.propose(cfg.strategy, x, cfg.n_candidates,
+                                 key=key_r, hess=h)
             bins = binning.bin_features(x, c)
             margin, t = grow(margin, bins, c)
             return margin, (t, c)
@@ -173,8 +207,8 @@ def _fit_scanned(x, y, keys, margin0, fixed_c, *, cfg: GBDTConfig,
     # or repropose_each_round=False (proposed once from round-0 stats)
     if fixed_c is None:
         _, h0 = grad_hess(margin0, y, cfg.objective)
-        fixed_c = proposal.propose_traced(cfg.strategy, x, cfg.n_candidates,
-                                          keys[0], h0)
+        fixed_c = proposal.propose(cfg.strategy, x, cfg.n_candidates,
+                                   key=keys[0], hess=h0)
     bins = binning.bin_features(x, fixed_c)
 
     def round_step(margin, _key_r):
@@ -205,7 +239,7 @@ def fit(x: jax.Array, y: jax.Array, cfg: GBDTConfig,
     base = _base_score(y, cfg.objective)
     margin0 = jnp.full((x.shape[0],), base, jnp.float32)
     keys = round_keys(key, cfg.n_trees)
-    backend = ops.resolve(cfg.backend)
+    spec = cfg.hist_spec().resolved()   # pin 'auto' outside the trace
 
     fixed_c = None
     proposal_s = 0.0
@@ -218,7 +252,7 @@ def fit(x: jax.Array, y: jax.Array, cfg: GBDTConfig,
         proposal_s = time.perf_counter() - t0
 
     forest, cands, margin = _fit_scanned(x, y, keys, margin0, fixed_c,
-                                         cfg=cfg, backend=backend)
+                                         cfg=cfg, spec=spec)
     jax.block_until_ready(margin)
     return GBDTModel(cfg, forest, base, cands,
                      proposal_seconds=proposal_s,
@@ -239,6 +273,7 @@ def fit_reference(x: jax.Array, y: jax.Array, cfg: GBDTConfig,
 
     base = _base_score(y, cfg.objective)
     margin = jnp.full((x.shape[0],), base, jnp.float32)
+    spec = cfg.hist_spec()
 
     trees: list[tree_lib.Tree] = []
     cands: list[jax.Array] = []
@@ -257,9 +292,9 @@ def fit_reference(x: jax.Array, y: jax.Array, cfg: GBDTConfig,
             cands.append(c)
         t = tree_lib.build_tree(
             bins, jnp.stack([g, h], 1), cands[-1],
-            max_depth=cfg.max_depth, nbins=cfg.nbins, l2=cfg.l2,
+            max_depth=cfg.max_depth, l2=cfg.l2,
             gamma=cfg.gamma, min_child_weight=cfg.min_child_weight,
-            backend=cfg.backend)
+            spec=spec)
         trees.append(t)
         margin = margin + cfg.learning_rate * tree_lib.predict_binned(
             t, bins, max_depth=cfg.max_depth)
@@ -272,13 +307,13 @@ def fit_reference(x: jax.Array, y: jax.Array, cfg: GBDTConfig,
 
 
 def accuracy(model: GBDTModel, x, y) -> float:
-    p = model.predict(jnp.asarray(x, jnp.float32))
-    if model.config.objective == "logistic":
-        return float(jnp.mean((p > 0.5) == (jnp.asarray(y) > 0.5)))
-    raise ValueError("accuracy is for classification")
+    if model.config.objective != "logistic":
+        raise ValueError("accuracy is for classification")
+    lbl = model.predict(x, output="label")
+    return float(jnp.mean((lbl > 0.5) == (jnp.asarray(y) > 0.5)))
 
 
 def mape(model: GBDTModel, x, y) -> float:
-    p = model.predict(jnp.asarray(x, jnp.float32))
+    p = model.predict(x, output="label")   # regression 'label' = value
     y = jnp.asarray(y, jnp.float32)
     return float(jnp.mean(jnp.abs((p - y) / jnp.where(y == 0, 1.0, y)))) * 100

@@ -91,7 +91,7 @@ def _worker_base_and_pool(x_local, y_local, key, *, cfg, axis, n_global):
 
 
 def _worker_fit(x_local, y_local, key, *, cfg: boosting.GBDTConfig,
-                axis: str, n_global: int, backend: str):
+                axis: str, n_global: int, spec: ops.HistSpec):
     """Traced per-worker trainer; runs identically on every 'data' slice.
 
     One lax.scan over rounds — the round step (with its all_gather /
@@ -106,9 +106,9 @@ def _worker_fit(x_local, y_local, key, *, cfg: boosting.GBDTConfig,
         g, h = boosting.grad_hess(margin, y_local, cfg.objective)
         t, node = tree_lib.build_tree(
             bins, jnp.stack([g, h], 1), cands,
-            max_depth=cfg.max_depth, nbins=cfg.nbins, l2=cfg.l2,
+            max_depth=cfg.max_depth, l2=cfg.l2,
             gamma=cfg.gamma, min_child_weight=cfg.min_child_weight,
-            backend=backend, axis_name=axis, return_leaf_nodes=True)
+            spec=spec, axis_name=axis, return_leaf_nodes=True)
         # growth already routed every local row to its leaf — gather the
         # leaf values directly instead of re-descending the tree
         margin = margin + cfg.learning_rate * t.leaf_value[node]
@@ -141,7 +141,7 @@ def _worker_fit(x_local, y_local, key, *, cfg: boosting.GBDTConfig,
 
 def _worker_fit_reference(x_local, y_local, key, *,
                           cfg: boosting.GBDTConfig, axis: str,
-                          n_global: int, backend: str):
+                          n_global: int, spec: ops.HistSpec):
     """The original unrolled per-worker loop (O(n_trees) traced graph).
     Kept as the semantic oracle for the scanned worker."""
     base, local_pool = _worker_base_and_pool(
@@ -160,9 +160,9 @@ def _worker_fit_reference(x_local, y_local, key, *,
             cands.append(c)
         t = tree_lib.build_tree(
             bins, jnp.stack([g, h], 1), cands[-1],
-            max_depth=cfg.max_depth, nbins=cfg.nbins, l2=cfg.l2,
+            max_depth=cfg.max_depth, l2=cfg.l2,
             gamma=cfg.gamma, min_child_weight=cfg.min_child_weight,
-            backend=backend, axis_name=axis)
+            spec=spec, axis_name=axis)
         trees.append(t)
         margin = margin + cfg.learning_rate * tree_lib.predict_binned(
             t, bins, max_depth=cfg.max_depth)
@@ -201,7 +201,7 @@ def fit_distributed(x, y, cfg: boosting.GBDTConfig, mesh: Mesh,
 
     worker = _worker_fit_reference if reference else _worker_fit
     fn = functools.partial(worker, cfg=cfg, axis=axis, n_global=n,
-                           backend=ops.resolve(cfg.backend))
+                           spec=cfg.hist_spec().resolved())
     forest, cands, base, _margin = jax.jit(compat.shard_map(
         fn, mesh=mesh,
         in_specs=(P(axis, None), P(axis), P()),

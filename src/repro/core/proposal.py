@@ -15,6 +15,7 @@ harmless for split finding).
 
 from __future__ import annotations
 
+import warnings
 from functools import partial
 from typing import Literal
 
@@ -141,39 +142,66 @@ def exact_candidates(x: np.ndarray, k: int) -> np.ndarray:
 # Unified front end.
 # ---------------------------------------------------------------------------
 
-def propose_traced(strategy: Strategy, x: jax.Array, k: int,
-                   key: jax.Array, hess: jax.Array) -> jax.Array:
-    """Proposal dispatch restricted to :data:`TRACEABLE` strategies.
-
-    Safe to call under jit / inside a ``lax.scan`` body (``key`` and
-    ``hess`` may be tracers); the strategy itself is static.  Matches
-    :func:`propose` value-for-value on the shared strategies.
-    """
-    if strategy == "random":
-        return random_candidates(key, x, k)
-    if strategy == "weighted_quantile":
-        return weighted_quantile_candidates(x, hess, k)
-    if strategy == "uniform_range":
-        return uniform_range_candidates(x, k)
-    raise ValueError(f"strategy {strategy!r} is not traceable "
-                     f"(TRACEABLE={TRACEABLE})")
+def _in_traced_context(*operands) -> bool:
+    """True when we are inside a jit/scan trace (any operand is a tracer,
+    or the global trace state is dirty)."""
+    if any(isinstance(a, jax.core.Tracer) for a in operands if a is not None):
+        return True
+    return not jax.core.trace_state_clean()
 
 
 def propose(strategy: Strategy, x, k: int, *, key: jax.Array | None = None,
-            hess: jax.Array | None = None) -> jnp.ndarray:
-    """Single-host proposal dispatch (distributed version in distributed.py)."""
+            hess: jax.Array | None = None,
+            traced: bool | None = None) -> jnp.ndarray:
+    """Unified proposal dispatch (distributed version in distributed.py).
+
+    One entry point for both host code and jit-traced code: with
+    ``traced=None`` (default) the jit context is auto-detected — any
+    tracer operand, or a dirty trace state, selects the traced path,
+    which restricts dispatch to the :data:`TRACEABLE` strategies (pure
+    jax ops, safe inside a ``lax.scan`` round step).  Host-only
+    strategies ('gk_quantile', 'exact') run numpy on concrete arrays and
+    raise ``ValueError`` if requested while tracing.  Pass
+    ``traced=True``/``False`` to force a path.
+
+    Args:
+      x: (n, f) feature matrix.
+      k: candidates per feature.
+      key: PRNG key (required for 'random').
+      hess: (n,) hessian weights for 'weighted_quantile'; defaults to
+        ones (the unweighted quantile sketch).
+
+    Returns:
+      (f, k) sorted float32 candidates.
+    """
+    if traced is None:
+        traced = _in_traced_context(x, key, hess)
     if strategy == "random":
         if key is None:
             raise ValueError("random proposal needs a PRNG key")
         return random_candidates(key, jnp.asarray(x), k)
-    if strategy == "gk_quantile":
-        return jnp.asarray(gk_quantile_candidates(np.asarray(x), k))
     if strategy == "weighted_quantile":
         if hess is None:
             hess = jnp.ones(x.shape[0], dtype=jnp.float32)
         return weighted_quantile_candidates(jnp.asarray(x), hess, k)
     if strategy == "uniform_range":
         return uniform_range_candidates(jnp.asarray(x), k)
-    if strategy == "exact":
-        return jnp.asarray(exact_candidates(np.asarray(x), k))
-    raise ValueError(f"unknown strategy {strategy!r}")
+    if strategy not in ("gk_quantile", "exact"):
+        raise ValueError(f"unknown strategy {strategy!r}")
+    if traced:
+        raise ValueError(
+            f"strategy {strategy!r} is host-only (numpy) and cannot run "
+            f"under jit; propose outside the trace (TRACEABLE={TRACEABLE})")
+    if strategy == "gk_quantile":
+        return jnp.asarray(gk_quantile_candidates(np.asarray(x), k))
+    return jnp.asarray(exact_candidates(np.asarray(x), k))
+
+
+def propose_traced(strategy: Strategy, x: jax.Array, k: int,
+                   key: jax.Array, hess: jax.Array) -> jax.Array:
+    """Deprecated: use ``propose(strategy, x, k, key=key, hess=hess)`` —
+    the unified dispatcher auto-detects jit context."""
+    warnings.warn(
+        "propose_traced is deprecated; use propose(strategy, x, k, "
+        "key=key, hess=hess)", DeprecationWarning, stacklevel=2)
+    return propose(strategy, x, k, key=key, hess=hess, traced=True)

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from ..kernels import ops
+from ..kernels.ops import HistSpec
 
 
 class Tree(NamedTuple):
@@ -67,20 +68,36 @@ def _level_slice(depth: int) -> slice:
 
 @functools.partial(jax.jit, static_argnames=(
     "max_depth", "nbins", "l2", "gamma", "min_child_weight", "backend",
-    "axis_name", "return_leaf_nodes"))
+    "spec", "axis_name", "return_leaf_nodes"))
 def build_tree(bins: jax.Array, gh: jax.Array, candidates: jax.Array, *,
-               max_depth: int, nbins: int, l2: float = 1.0,
+               max_depth: int, nbins: int | None = None, l2: float = 1.0,
                gamma: float = 0.0, min_child_weight: float = 1e-6,
                backend: str = "auto",
+               spec: HistSpec | None = None,
                axis_name: str | None = None,
                return_leaf_nodes: bool = False):
     """Grow one tree on binned data.
+
+    The level loop is a ``lax.scan`` over a *uniform* frontier of
+    ``F = 2^(max_depth-1)`` nodes: every level's histogram has the same
+    static shape, so ONE compiled scatter (or Pallas launch) serves all
+    levels instead of one program per depth.  At depth ``d < max_depth-1``
+    node ids only occupy ``[0, 2^d)``; the unpopulated tail has an
+    all-zero histogram, fails ``min_child_weight`` at every bin, and
+    falls out as a passthrough — exactly the semantics the complete-tree
+    layout already gives empty nodes, so the widened frontier is
+    bit-exact vs the per-depth loop (same rows hit the same buckets in
+    the same order).
 
     Args:
       bins: (n, f) int32 bin ids in [0, nbins).
       gh: (n, 2) grad/hess panel for the current boosting round.
       candidates: (f, k) candidate values (k = nbins - 1); used only to
         record raw thresholds for inference on unbinned data.
+      nbins, backend: legacy kwargs; superseded by ``spec``.  Exactly
+        one of ``spec`` / ``nbins`` must be provided.
+      spec: :class:`HistSpec` describing the histogram workload.  Its
+        ``n_nodes`` must cover the frontier (``>= 2^(max_depth-1)``).
       axis_name: if set, every histogram is lax.psum'd over this mesh
         axis (distributed-XGBoost histogram AllReduce inside shard_map);
         None = single host.
@@ -93,26 +110,37 @@ def build_tree(bins: jax.Array, gh: jax.Array, candidates: jax.Array, *,
       A :class:`Tree`, or ``(Tree, node)`` with ``node`` the (n,) int32
       leaf assignment when ``return_leaf_nodes`` is set.
     """
+    frontier = 2 ** max(max_depth - 1, 0)
+    if spec is None:
+        if nbins is None:
+            raise TypeError("build_tree needs either spec= or nbins=")
+        spec = HistSpec(n_nodes=frontier, nbins=nbins, n_levels=1,
+                        backend=backend)
+    else:
+        if nbins is not None and nbins != spec.nbins:
+            raise ValueError(
+                f"nbins={nbins} conflicts with spec.nbins={spec.nbins}")
+        if spec.n_nodes < frontier:
+            raise ValueError(
+                f"spec.n_nodes={spec.n_nodes} < frontier {frontier} "
+                f"for max_depth={max_depth}")
+    nbins = spec.nbins
+    lspec = spec.with_levels(1)        # one scan step = one level
+
     psum = (None if axis_name is None
             else lambda a: jax.lax.psum(a, axis_name))
     n, f = bins.shape
     n_inner = 2 ** max_depth - 1
     n_leaves = 2 ** max_depth
 
-    feature = jnp.full((n_inner,), -1, jnp.int32)
-    split_bin = jnp.full((n_inner,), nbins - 1, jnp.int32)
-    threshold = jnp.full((n_inner,), jnp.inf, jnp.float32)
-
-    node = jnp.zeros((n,), jnp.int32)          # level-local node id
-    for depth in range(max_depth):
-        n_nodes = 2 ** depth
-        hist = ops.hist(bins, node, gh, n_nodes=n_nodes, nbins=nbins,
-                        backend=backend)
+    def level_step(node, _):
+        # (n_nodes, f, nbins, 2); same shape every level — one program
+        hist = ops.hist_levels(bins, node[None], gh, lspec)[0]
         if psum is not None:
             hist = psum(hist)
         gains, sbins = ops.split_gain(hist, l2=l2, gamma=gamma,
                                       min_child_weight=min_child_weight,
-                                      backend=backend)       # (nodes, f)
+                                      backend=lspec.backend)  # (nodes, f)
         best_f = jnp.argmax(gains, axis=1).astype(jnp.int32)  # (nodes,)
         best_gain = jnp.take_along_axis(gains, best_f[:, None], 1)[:, 0]
         best_s = jnp.take_along_axis(sbins, best_f[:, None], 1)[:, 0]
@@ -122,23 +150,39 @@ def build_tree(bins: jax.Array, gh: jax.Array, candidates: jax.Array, *,
         lvl_sbin = jnp.where(do_split, best_s, nbins - 1)
         lvl_thresh = jnp.where(
             do_split,
-            candidates[lvl_feature.clip(0), lvl_sbin.clip(0, candidates.shape[1] - 1)],
+            candidates[lvl_feature.clip(0),
+                       lvl_sbin.clip(0, candidates.shape[1] - 1)],
             jnp.inf)
-
-        sl = _level_slice(depth)
-        feature = feature.at[sl].set(lvl_feature)
-        split_bin = split_bin.at[sl].set(lvl_sbin)
-        threshold = threshold.at[sl].set(lvl_thresh)
 
         # route rows: left (2*node) if bin <= s else right (2*node + 1)
         row_bin = jnp.take_along_axis(
             bins, lvl_feature.clip(0)[node][:, None], axis=1)[:, 0]
         go_left = row_bin <= lvl_sbin[node]
         node = node * 2 + jnp.where(go_left, 0, 1)
+        return node, (lvl_feature, lvl_sbin, lvl_thresh)
 
-    # leaf values from final-level grad/hess totals
-    seg = jax.ops.segment_sum(gh.astype(jnp.float32), node,
-                              num_segments=n_leaves)
+    node = jnp.zeros((n,), jnp.int32)          # level-local node id
+    if max_depth > 0:
+        node, (feats, sbins_l, threshs) = jax.lax.scan(
+            level_step, node, None, length=max_depth)
+
+    feature = jnp.full((n_inner,), -1, jnp.int32)
+    split_bin = jnp.full((n_inner,), nbins - 1, jnp.int32)
+    threshold = jnp.full((n_inner,), jnp.inf, jnp.float32)
+    for depth in range(max_depth):
+        sl = _level_slice(depth)
+        w = 2 ** depth                 # populated prefix of the frontier
+        feature = feature.at[sl].set(feats[depth, :w])
+        split_bin = split_bin.at[sl].set(sbins_l[depth, :w])
+        threshold = threshold.at[sl].set(threshs[depth, :w])
+
+    # leaf values from final-level grad/hess totals; grad/hess packed
+    # into one complex64 scatter (bit-exact: lanes add independently,
+    # same row order) — ~1.3x faster than the 2-wide segment_sum on CPU
+    z = jax.lax.complex(gh[:, 0].astype(jnp.float32),
+                        gh[:, 1].astype(jnp.float32))
+    seg_z = jnp.zeros((n_leaves,), jnp.complex64).at[node].add(z)
+    seg = jnp.stack([seg_z.real, seg_z.imag], -1)
     if psum is not None:
         seg = psum(seg)
     leaf_value = -seg[:, 0] / (seg[:, 1] + l2)

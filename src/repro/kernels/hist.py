@@ -11,9 +11,15 @@ TPU-native formulation is **histogram-as-matmul**:
       hist[f, node*nbins+bin, :] += O.T @ [g h]
 
 The one-hot never leaves VMEM; the contraction dimension (rows tile) is a
-multiple of 128 so the MXU is fully utilised.  Grid is
-(features, node_chunks, row_tiles) with the row_tiles axis innermost and
-accumulating into the same output block.
+multiple of 128 so the MXU is fully utilised.
+
+The level-batched entry point :func:`hist_levels_pallas` accumulates the
+histograms of L node-id assignments ("levels") of the same rows in one
+launch: the grid's middle axis enumerates (level, node_chunk) pairs, so
+every frontier (level, node) block lives in VMEM while its row tiles
+stream through — one kernel for the whole frontier instead of one launch
+per level.  Grid is (features, level*node_chunks, row_tiles) with the
+row_tiles axis innermost and accumulating into the same output block.
 """
 
 from __future__ import annotations
@@ -28,8 +34,8 @@ from jax.experimental import pallas as pl
 DEFAULT_ROW_TILE = 512
 
 
-def _hist_kernel(bins_ref, node_ref, gh_ref, out_ref, *,
-                 nbins: int, node_chunk: int):
+def _hist_levels_kernel(bins_ref, node_ref, gh_ref, out_ref, *,
+                        nbins: int, node_chunk: int, n_chunks: int):
     t = pl.program_id(2)
 
     @pl.when(t == 0)
@@ -40,7 +46,9 @@ def _hist_kernel(bins_ref, node_ref, gh_ref, out_ref, *,
     node = node_ref[:, 0]                       # (rt,) int32 (-1 = padding)
     gh = gh_ref[...].astype(jnp.float32)        # (rt, 2)
 
-    base = pl.program_id(1) * node_chunk
+    # middle grid axis c enumerates (level, chunk): level = c // n_chunks
+    # is encoded in the node BlockSpec; only the chunk offset matters here.
+    base = (pl.program_id(1) % n_chunks) * node_chunk
     local = node - base
     valid = (local >= 0) & (local < node_chunk)
     idx = jnp.where(valid, local * nbins + bins, 0)
@@ -54,24 +62,26 @@ def _hist_kernel(bins_ref, node_ref, gh_ref, out_ref, *,
 
 @functools.partial(jax.jit, static_argnames=(
     "n_nodes", "nbins", "row_tile", "node_chunk", "interpret"))
-def hist_pallas(bins: jax.Array, node: jax.Array, gh: jax.Array, *,
-                n_nodes: int, nbins: int,
-                row_tile: int = DEFAULT_ROW_TILE,
-                node_chunk: int = 0,
-                interpret: bool = False) -> jax.Array:
-    """Per-(node, feature, bin) grad/hess sums.
+def hist_levels_pallas(bins: jax.Array, node_per_level: jax.Array,
+                       gh: jax.Array, *, n_nodes: int, nbins: int,
+                       row_tile: int = DEFAULT_ROW_TILE,
+                       node_chunk: int = 0,
+                       interpret: bool = False) -> jax.Array:
+    """Per-(level, node, feature, bin) grad/hess sums in one launch.
 
     Args:
       bins: (n, f) int32 bin ids in [0, nbins).
-      node: (n,) int32 node assignment in [0, n_nodes); negative = masked.
+      node_per_level: (L, n) int32 node assignment per level in
+        [0, n_nodes); negative = row masked out at that level.
       gh: (n, 2) float grad/hess panel.
-      n_nodes: number of frontier nodes.
+      n_nodes: frontier nodes per level.
       nbins: bins per feature.
       node_chunk: nodes per output block (VMEM knob); 0 = auto.
 
     Returns:
-      (n_nodes, f, nbins, 2) float32 histogram.
+      (L, n_nodes, f, nbins, 2) float32 histogram.
     """
+    L, _ = node_per_level.shape
     n, f = bins.shape
     if node_chunk <= 0:
         # keep the one-hot tile under ~8 MB of VMEM: rt * chunk*nbins * 4B
@@ -80,27 +90,47 @@ def hist_pallas(bins: jax.Array, node: jax.Array, gh: jax.Array, *,
     nodes_padded = n_chunks * node_chunk
 
     # pad rows to a tile multiple; padding rows get node=-1 (masked out)
+    node_t = node_per_level.T                   # (n, L): row-tiled blocks
     n_pad = -n % row_tile
     if n_pad:
         bins = jnp.pad(bins, ((0, n_pad), (0, 0)))
-        node = jnp.pad(node, (0, n_pad), constant_values=-1)
+        node_t = jnp.pad(node_t, ((0, n_pad), (0, 0)), constant_values=-1)
         gh = jnp.pad(gh, ((0, n_pad), (0, 0)))
     nt = (n + n_pad) // row_tile
 
     out = pl.pallas_call(
-        functools.partial(_hist_kernel, nbins=nbins, node_chunk=node_chunk),
-        grid=(f, n_chunks, nt),
+        functools.partial(_hist_levels_kernel, nbins=nbins,
+                          node_chunk=node_chunk, n_chunks=n_chunks),
+        grid=(f, L * n_chunks, nt),
         in_specs=[
             pl.BlockSpec((row_tile, 1), lambda fi, c, t: (t, fi)),
-            pl.BlockSpec((row_tile, 1), lambda fi, c, t: (t, 0)),
+            pl.BlockSpec((row_tile, 1), lambda fi, c, t: (t, c // n_chunks)),
             pl.BlockSpec((row_tile, 2), lambda fi, c, t: (t, 0)),
         ],
         out_specs=pl.BlockSpec((1, node_chunk * nbins, 2),
                                lambda fi, c, t: (fi, c, 0)),
-        out_shape=jax.ShapeDtypeStruct((f, nodes_padded * nbins, 2),
+        out_shape=jax.ShapeDtypeStruct((f, L * nodes_padded * nbins, 2),
                                        jnp.float32),
         interpret=interpret,
-    )(bins, node[:, None], gh)
+    )(bins, node_t, gh)
 
-    out = out.reshape(f, nodes_padded, nbins, 2)[:, :n_nodes]
-    return jnp.transpose(out, (1, 0, 2, 3))
+    out = out.reshape(f, L, nodes_padded, nbins, 2)[:, :, :n_nodes]
+    return jnp.transpose(out, (1, 2, 0, 3, 4))
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_nodes", "nbins", "row_tile", "node_chunk", "interpret"))
+def hist_pallas(bins: jax.Array, node: jax.Array, gh: jax.Array, *,
+                n_nodes: int, nbins: int,
+                row_tile: int = DEFAULT_ROW_TILE,
+                node_chunk: int = 0,
+                interpret: bool = False) -> jax.Array:
+    """Per-(node, feature, bin) grad/hess sums — single-level view of
+    :func:`hist_levels_pallas`.
+
+    Returns:
+      (n_nodes, f, nbins, 2) float32 histogram.
+    """
+    return hist_levels_pallas(bins, node[None], gh, n_nodes=n_nodes,
+                              nbins=nbins, row_tile=row_tile,
+                              node_chunk=node_chunk, interpret=interpret)[0]

@@ -4,16 +4,28 @@ Each op picks between the Pallas kernel (TPU, or interpret=True for CPU
 validation) and the pure-jnp oracle in ref.py.  Call sites in the library
 go through these wrappers only — never through the kernels directly — so
 backend selection is a single switch.
+
+The histogram hot path is fronted by a small kernel API: a
+:class:`HistSpec` (static shape/backend/dtype policy, hashable so it can
+ride through ``jax.jit`` static args) plus :func:`hist_levels`, the
+level-batched entry point.  Library code builds one spec per fit and
+passes it down instead of hand-threading ``n_nodes``/``nbins``/
+``backend`` kwargs through every layer.
 """
 
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 
 from . import ref
-from .hist import hist_pallas
+from .hist import hist_levels_pallas, hist_pallas
 from .split_gain import split_gain_pallas
 from .flash_attention import flash_attention_pallas
+
+
+_BACKENDS = ("auto", "pallas", "interpret", "ref", "packed")
 
 
 def _on_tpu() -> bool:
@@ -31,24 +43,112 @@ def resolve(backend: str) -> str:
     """
     if backend == "auto":
         return "pallas" if _on_tpu() else "packed"
-    if backend not in ("pallas", "interpret", "ref", "packed"):
+    if backend not in _BACKENDS:
         raise ValueError(f"unknown backend {backend!r}")
     return backend
+
+
+@dataclasses.dataclass(frozen=True)
+class HistSpec:
+    """Static description of a histogram workload.
+
+    Frozen + hashable so a spec is a valid ``jax.jit`` static argument:
+    one spec per fit rides through the trainers and the tree builder
+    instead of loose ``n_nodes``/``nbins``/``backend`` kwargs.
+
+    Attributes:
+      n_nodes: frontier nodes per level (the widest level this spec
+        serves; shallower levels just leave high node ids empty).
+      nbins: bins per feature (``n_candidates + 1``).
+      n_levels: node-id assignments batched per :func:`hist_levels`
+        call.  A tree builder growing ``max_depth`` levels uses
+        ``n_levels = max_depth`` as its fit-wide spec and derives the
+        per-call view with :meth:`with_levels`.
+      backend: 'auto' | 'pallas' | 'interpret' | 'ref' | 'packed'.
+      acc_dtype: accumulator dtype policy.  Only 'float32' is
+        supported — it is the bit-exactness contract with ``hist_ref``
+        — but it is part of the spec so a future bf16/f64 policy is an
+        API no-op.
+    """
+    n_nodes: int
+    nbins: int
+    n_levels: int = 1
+    backend: str = "auto"
+    acc_dtype: str = "float32"
+
+    def __post_init__(self):
+        if self.n_nodes < 1:
+            raise ValueError(f"n_nodes must be >= 1, got {self.n_nodes}")
+        if self.nbins < 1:
+            raise ValueError(f"nbins must be >= 1, got {self.nbins}")
+        if self.n_levels < 1:
+            raise ValueError(f"n_levels must be >= 1, got {self.n_levels}")
+        if self.backend not in _BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r}")
+        if self.acc_dtype != "float32":
+            raise ValueError(
+                f"acc_dtype {self.acc_dtype!r} unsupported: 'float32' is "
+                "the bit-exactness contract with hist_ref")
+
+    def resolved(self) -> "HistSpec":
+        """Spec with 'auto' pinned to a concrete backend (call once per
+        fit, outside traced code)."""
+        return dataclasses.replace(self, backend=resolve(self.backend))
+
+    def with_levels(self, n_levels: int) -> "HistSpec":
+        """Same spec serving a different number of batched levels."""
+        return dataclasses.replace(self, n_levels=n_levels)
+
+
+def hist_levels(bins, node_per_level, gh, spec: HistSpec):
+    """Level-batched gradient/hessian histogram.
+
+    One call accumulates the histograms of ``spec.n_levels`` node-id
+    assignments of the same rows, keyed by (level, node, feature, bin):
+    the packed CPU backend issues a single complex64 scatter across all
+    levels, the Pallas backend a single launch whose grid covers the
+    whole (level, node) frontier.
+
+    Args:
+      bins: (n, f) int32 bin ids in [0, spec.nbins).
+      node_per_level: (spec.n_levels, n) int32 node ids in
+        [0, spec.n_nodes); negative = row masked out at that level.
+      gh: (n, 2) float grad/hess panel.
+      spec: static workload description (resolve 'auto' outside traced
+        code via ``spec.resolved()`` when tracing matters).
+
+    Returns:
+      (spec.n_levels, spec.n_nodes, f, nbins, 2) float32 — bit-exact vs
+      a per-level :func:`repro.kernels.ref.hist_ref` loop on the 'ref'
+      and 'packed' backends.
+    """
+    if node_per_level.ndim != 2 or node_per_level.shape[0] != spec.n_levels:
+        raise ValueError(
+            f"node_per_level must be (n_levels={spec.n_levels}, n), got "
+            f"shape {node_per_level.shape}")
+    backend = resolve(spec.backend)
+    if backend == "packed":
+        return ref.hist_levels_packed(bins, node_per_level, gh,
+                                      n_nodes=spec.n_nodes, nbins=spec.nbins)
+    if backend == "ref":
+        return ref.hist_levels_ref(bins, node_per_level, gh,
+                                   n_nodes=spec.n_nodes, nbins=spec.nbins)
+    return hist_levels_pallas(bins, node_per_level, gh,
+                              n_nodes=spec.n_nodes, nbins=spec.nbins,
+                              interpret=(backend == "interpret"))
 
 
 def hist(bins, node, gh, *, n_nodes: int, nbins: int,
          backend: str = "auto"):
     """Gradient/hessian histogram: (n_nodes, f, nbins, 2).
 
-    backend: 'auto' | 'pallas' | 'interpret' | 'ref' | 'packed'
+    Deprecated-in-spirit single-level entry point, kept as a thin view
+    of :func:`hist_levels` (see README "Architecture" for the
+    timeline).  New call sites should build a :class:`HistSpec`.
     """
-    backend = resolve(backend)
-    if backend == "packed":
-        return ref.hist_packed(bins, node, gh, n_nodes=n_nodes, nbins=nbins)
-    if backend == "ref":
-        return ref.hist_ref(bins, node, gh, n_nodes=n_nodes, nbins=nbins)
-    return hist_pallas(bins, node, gh, n_nodes=n_nodes, nbins=nbins,
-                       interpret=(backend == "interpret"))
+    spec = HistSpec(n_nodes=n_nodes, nbins=nbins, n_levels=1,
+                    backend=backend)
+    return hist_levels(bins, node[None], gh, spec)[0]
 
 
 def split_gain(hist_arr, *, l2: float = 1.0, gamma: float = 0.0,

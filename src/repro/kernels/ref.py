@@ -31,6 +31,56 @@ def hist_ref(bins: jax.Array, node: jax.Array, gh: jax.Array, *,
 
 
 @functools.partial(jax.jit, static_argnames=("n_nodes", "nbins"))
+def hist_levels_ref(bins: jax.Array, node_per_level: jax.Array,
+                    gh: jax.Array, *, n_nodes: int, nbins: int) -> jax.Array:
+    """Oracle for the level-batched histogram: a naive per-level loop of
+    :func:`hist_ref`, stacked along a leading level axis.
+
+    Args:
+      node_per_level: (n_levels, n) int32 node ids per level in
+        [0, n_nodes); negative = row masked out at that level.
+
+    Returns:
+      (n_levels, n_nodes, f, nbins, 2) float32.
+    """
+    return jnp.stack([
+        hist_ref(bins, node_per_level[lvl], gh, n_nodes=n_nodes, nbins=nbins)
+        for lvl in range(node_per_level.shape[0])])
+
+
+@functools.partial(jax.jit, static_argnames=("n_nodes", "nbins"))
+def hist_levels_packed(bins: jax.Array, node_per_level: jax.Array,
+                       gh: jax.Array, *, n_nodes: int,
+                       nbins: int) -> jax.Array:
+    """Level-batched CPU histogram: ONE complex64 scatter keyed by
+    (level, node, feature, bin).
+
+    Bit-exact vs :func:`hist_levels_ref`: buckets are disjoint across
+    levels and features, the real/imag lanes add independently, and
+    within each bucket the updates arrive in the same row order as the
+    per-level scatter.  The feature-bin offset ``fb`` and the packed
+    grad/hess panel are level-invariant, so batching L levels amortises
+    the index arithmetic that a per-level loop would recompute (and lets
+    XLA hoist both out of a level-step ``lax.scan``).
+    """
+    L, n = node_per_level.shape
+    f = bins.shape[1]
+    valid = node_per_level >= 0                            # (L, n)
+    node_c = jnp.where(valid, node_per_level, 0)
+    fb = jnp.arange(f, dtype=jnp.int32)[None, :] * nbins + bins   # (n, f)
+    z = jax.lax.complex(gh[:, 0].astype(jnp.float32),
+                        gh[:, 1].astype(jnp.float32)).astype(jnp.complex64)
+    zl = jnp.where(valid, z[None, :], 0)                   # (L, n)
+    lvl_node = (jnp.arange(L, dtype=jnp.int32)[:, None] * n_nodes + node_c)
+    flat = lvl_node[:, :, None] * (f * nbins) + fb[None]   # (L, n, f)
+    vals = jnp.broadcast_to(zl[:, :, None], (L, n, f))
+    out = jnp.zeros((L * n_nodes * f * nbins,), jnp.complex64)
+    out = out.at[flat.ravel()].add(vals.ravel())
+    return jnp.stack([out.real, out.imag], -1).reshape(
+        L, n_nodes, f, nbins, 2).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("n_nodes", "nbins"))
 def hist_packed(bins: jax.Array, node: jax.Array, gh: jax.Array, *,
                 n_nodes: int, nbins: int) -> jax.Array:
     """CPU-fast histogram: grad/hess packed into one complex64 scatter.
@@ -38,20 +88,12 @@ def hist_packed(bins: jax.Array, node: jax.Array, gh: jax.Array, *,
     Bit-exact vs :func:`hist_ref` (the real/imag lanes add independently,
     in the same row order), but issues ONE scalar scatter-add per (row,
     feature) instead of a 2-wide slice update — ~1.6x faster through
-    XLA:CPU's scatter path.  This is the default CPU backend for the
-    boosting hot loop; ``hist_ref`` stays the correctness oracle.
+    XLA:CPU's scatter path.  Single-level view of
+    :func:`hist_levels_packed`; ``hist_ref`` stays the correctness
+    oracle.
     """
-    n, f = bins.shape
-    valid = node >= 0
-    node_c = jnp.where(valid, node, 0)
-    flat = (node_c[:, None] * f + jnp.arange(f)[None, :]) * nbins + bins
-    z = jax.lax.complex(gh[:, 0], gh[:, 1]).astype(jnp.complex64)
-    z = jnp.where(valid, z, 0)
-    vals = jnp.broadcast_to(z[:, None], (n, f))
-    out = jnp.zeros((n_nodes * f * nbins,), jnp.complex64)
-    out = out.at[flat.ravel()].add(vals.ravel())
-    return jnp.stack([out.real, out.imag], -1).reshape(
-        n_nodes, f, nbins, 2).astype(jnp.float32)
+    return hist_levels_packed(bins, node[None], gh,
+                              n_nodes=n_nodes, nbins=nbins)[0]
 
 
 @functools.partial(jax.jit, static_argnames=())

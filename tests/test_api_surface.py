@@ -1,0 +1,175 @@
+"""The stable top-level `repro` API and the deprecation story.
+
+Pins: (1) the `repro.__init__` export surface, (2) the unified
+`proposal.propose` dispatcher (jit-context auto-detection, host-only
+strategies refusing to trace, deprecated `propose_traced` alias), and
+(3) `GBDTModel.predict(output=...)` with the deprecated
+`predict_margin` alias.
+"""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.core import boosting, proposal
+
+
+def _toy(n=600, f=4, seed=0, objective="logistic"):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (n, f))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (f,))
+    if objective == "logistic":
+        y = (x @ w > 0).astype(jnp.float32)
+    else:
+        y = (x @ w).astype(jnp.float32)
+    return x, y
+
+
+# ---------------------------------------------------------------------------
+# Export surface.
+# ---------------------------------------------------------------------------
+
+def test_top_level_exports():
+    required = {"GBDTConfig", "fit", "fit_reference", "fit_distributed",
+                "Forest", "HistSpec"}
+    assert required <= set(repro.__all__)
+    for name in repro.__all__:
+        assert getattr(repro, name) is not None
+    # the re-exports ARE the canonical objects, not copies
+    assert repro.GBDTConfig is boosting.GBDTConfig
+    assert repro.fit is boosting.fit
+
+
+def test_top_level_fit_roundtrip():
+    x, y = _toy()
+    cfg = repro.GBDTConfig(n_trees=3, max_depth=3, n_candidates=8)
+    m = repro.fit(x, y, cfg, jax.random.PRNGKey(0))
+    assert isinstance(m.forest, repro.Forest)
+    assert 0.5 <= repro.accuracy(m, x, y) <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# Unified propose dispatcher.
+# ---------------------------------------------------------------------------
+
+def test_propose_host_matches_strategies():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(100, 3)),
+                    jnp.float32)
+    key = jax.random.PRNGKey(1)
+    np.testing.assert_array_equal(
+        np.asarray(proposal.propose("random", x, 5, key=key)),
+        np.asarray(proposal.random_candidates(key, x, 5)))
+    np.testing.assert_array_equal(
+        np.asarray(proposal.propose("exact", x, 5)),
+        np.asarray(proposal.exact_candidates(np.asarray(x), 5)))
+
+
+def test_propose_auto_detects_jit_context():
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(64, 2)),
+                    jnp.float32)
+
+    @jax.jit
+    def traced(x, key):
+        return proposal.propose("random", x, 4, key=key)
+
+    key = jax.random.PRNGKey(2)
+    np.testing.assert_array_equal(
+        np.asarray(traced(x, key)),
+        np.asarray(proposal.propose("random", x, 4, key=key)))
+
+
+@pytest.mark.parametrize("strategy", ["gk_quantile", "exact"])
+def test_propose_host_only_refuses_to_trace(strategy):
+    x = jnp.ones((16, 2), jnp.float32)
+
+    @jax.jit
+    def traced(x):
+        return proposal.propose(strategy, x, 3)
+
+    with pytest.raises(ValueError, match="host-only"):
+        traced(x)
+    # forcing traced=True outside jit hits the same guard
+    with pytest.raises(ValueError, match="host-only"):
+        proposal.propose(strategy, x, 3, traced=True)
+
+
+def test_propose_traced_alias_warns_and_matches():
+    x = jnp.asarray(np.random.default_rng(2).normal(size=(50, 2)),
+                    jnp.float32)
+    key = jax.random.PRNGKey(3)
+    hess = jnp.ones((50,), jnp.float32)
+    with pytest.warns(DeprecationWarning, match="propose_traced"):
+        old = proposal.propose_traced("weighted_quantile", x, 4, key, hess)
+    new = proposal.propose("weighted_quantile", x, 4, key=key, hess=hess)
+    np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
+
+
+def test_propose_weighted_quantile_defaults_hess_to_ones():
+    x = jnp.asarray(np.random.default_rng(3).normal(size=(80, 2)),
+                    jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(proposal.propose("weighted_quantile", x, 4)),
+        np.asarray(proposal.propose("weighted_quantile", x, 4,
+                                    hess=jnp.ones((80,), jnp.float32))))
+
+
+# ---------------------------------------------------------------------------
+# GBDTModel.predict(output=...).
+# ---------------------------------------------------------------------------
+
+def test_predict_outputs_logistic():
+    x, y = _toy(seed=4)
+    cfg = repro.GBDTConfig(n_trees=3, max_depth=3, n_candidates=8)
+    m = repro.fit(x, y, cfg, jax.random.PRNGKey(0))
+    margin = m.predict(x, output="margin")
+    proba = m.predict(x, output="proba")
+    label = m.predict(x, output="label")
+    np.testing.assert_allclose(np.asarray(proba),
+                               np.asarray(jax.nn.sigmoid(margin)),
+                               rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(label),
+                                  np.asarray(proba > 0.5, np.float32))
+    assert set(np.unique(np.asarray(label))) <= {0.0, 1.0}
+    with pytest.raises(ValueError, match="unknown output"):
+        m.predict(x, output="logits")
+
+
+def test_predict_outputs_mse():
+    x, y = _toy(seed=5, objective="mse")
+    cfg = repro.GBDTConfig(n_trees=3, max_depth=3, n_candidates=8,
+                           objective="mse")
+    m = repro.fit(x, y, cfg, jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(np.asarray(m.predict(x)),
+                                  np.asarray(m.predict(x, output="margin")))
+    with pytest.raises(ValueError, match="proba"):
+        m.predict(x, output="proba")
+    assert repro.mape(m, x, y) >= 0.0
+
+
+def test_predict_margin_alias_warns_and_matches():
+    x, y = _toy(seed=6)
+    cfg = repro.GBDTConfig(n_trees=2, max_depth=3, n_candidates=8)
+    m = repro.fit(x, y, cfg, jax.random.PRNGKey(0))
+    with pytest.warns(DeprecationWarning, match="predict_margin"):
+        old = m.predict_margin(x)
+    np.testing.assert_array_equal(np.asarray(old),
+                                  np.asarray(m.predict(x, output="margin")))
+
+
+def test_metrics_route_through_predict():
+    x, y = _toy(seed=7)
+    cfg = repro.GBDTConfig(n_trees=2, max_depth=3, n_candidates=8)
+    m = repro.fit(x, y, cfg, jax.random.PRNGKey(0))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        acc = repro.accuracy(m, x, y)      # must not touch deprecated API
+    assert 0.0 <= acc <= 1.0
+    with pytest.raises(ValueError, match="classification"):
+        cfg_mse = repro.GBDTConfig(n_trees=2, max_depth=3, n_candidates=8,
+                                   objective="mse")
+        repro.accuracy(repro.fit(x, y, cfg_mse, jax.random.PRNGKey(0)),
+                       x, y)

@@ -1,0 +1,149 @@
+"""Bit-exactness of the level-batched histogram behind the HistSpec API.
+
+`ops.hist_levels` must reproduce a naive per-level `hist_ref` loop
+EXACTLY (same f32 bits) on the 'ref' and 'packed' backends — the packed
+complex64 scatter adds each bucket's rows in the same order, so no
+re-association happens — and to tight tolerance on the Pallas interpret
+path (one-hot matmul re-associates the row sum).  Shapes deliberately
+include non-power-of-2 node counts, nbins=1, single-sample leaves, and
+masked (-1) rows.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import tree as tree_lib
+from repro.kernels import ops, ref
+from repro.kernels.ops import HistSpec
+
+
+# (n, f, nbins, n_nodes, n_levels)
+SHAPES = [
+    (257, 3, 8, 3, 2),      # non-power-of-2 nodes, odd n
+    (64, 2, 1, 4, 3),       # nbins=1: every row in bin 0
+    (33, 5, 17, 32, 6),     # n_nodes ~ n: single-sample/empty leaves
+    (1024, 7, 33, 16, 1),   # single level through the batched path
+    (500, 4, 16, 5, 4),
+]
+
+
+def _case(n, f, nbins, n_nodes, L, seed=0, masked=True):
+    rng = np.random.default_rng(seed)
+    bins = jnp.asarray(rng.integers(0, nbins, (n, f)), jnp.int32)
+    lo = -1 if masked else 0            # -1 rows must drop out entirely
+    node = jnp.asarray(rng.integers(lo, n_nodes, (L, n)), jnp.int32)
+    gh = jnp.asarray(rng.normal(size=(n, 2)), jnp.float32)
+    return bins, node, gh
+
+
+def _oracle(bins, node, gh, n_nodes, nbins):
+    return jnp.stack([
+        ref.hist_ref(bins, node[l], gh, n_nodes=n_nodes, nbins=nbins)
+        for l in range(node.shape[0])])
+
+
+@pytest.mark.parametrize("n,f,nbins,n_nodes,L", SHAPES)
+@pytest.mark.parametrize("backend", ["ref", "packed"])
+def test_hist_levels_bit_exact(n, f, nbins, n_nodes, L, backend):
+    bins, node, gh = _case(n, f, nbins, n_nodes, L)
+    spec = HistSpec(n_nodes=n_nodes, nbins=nbins, n_levels=L,
+                    backend=backend)
+    out = ops.hist_levels(bins, node, gh, spec)
+    want = _oracle(bins, node, gh, n_nodes, nbins)
+    assert out.shape == (L, n_nodes, f, nbins, 2)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+@pytest.mark.parametrize("n,f,nbins,n_nodes,L", SHAPES[:3])
+def test_hist_levels_pallas_interpret(n, f, nbins, n_nodes, L):
+    bins, node, gh = _case(n, f, nbins, n_nodes, L, seed=1)
+    spec = HistSpec(n_nodes=n_nodes, nbins=nbins, n_levels=L,
+                    backend="interpret")
+    out = ops.hist_levels(bins, node, gh, spec)
+    want = _oracle(bins, node, gh, n_nodes, nbins)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-6, atol=1e-5)
+
+
+def test_hist_single_level_delegates():
+    """ops.hist is the L=1 view of hist_levels (old API kept working)."""
+    bins, node, gh = _case(300, 4, 9, 6, 1, seed=2)
+    one = ops.hist(bins, node[0], gh, n_nodes=6, nbins=9, backend="packed")
+    spec = HistSpec(n_nodes=6, nbins=9, n_levels=1, backend="packed")
+    batched = ops.hist_levels(bins, node, gh, spec)
+    np.testing.assert_array_equal(np.asarray(one), np.asarray(batched[0]))
+
+
+def test_masked_rows_drop_out():
+    """A -1 node id contributes nothing at that level, but the same row
+    still counts at levels where it has a valid id."""
+    bins, _, gh = _case(100, 2, 4, 3, 1, seed=3)
+    rng = np.random.default_rng(3)
+    node_ok = jnp.asarray(rng.integers(0, 3, (100,)), jnp.int32)
+    node = jnp.stack([node_ok, node_ok.at[:50].set(-1)])
+    spec = HistSpec(n_nodes=3, nbins=4, n_levels=2, backend="packed")
+    out = ops.hist_levels(bins, node, gh, spec)
+    np.testing.assert_array_equal(
+        np.asarray(out[0]),
+        np.asarray(ref.hist_ref(bins, node_ok, gh, n_nodes=3, nbins=4)))
+    np.testing.assert_array_equal(
+        np.asarray(out[1]),
+        np.asarray(ref.hist_ref(bins, node[1], gh, n_nodes=3, nbins=4)))
+    # level 1 lost exactly the first 50 rows' mass
+    tot0 = float(out[0].sum())
+    tot1 = float(out[1].sum())
+    assert tot0 != tot1
+
+
+def test_histspec_validation_and_views():
+    with pytest.raises(ValueError):
+        HistSpec(n_nodes=0, nbins=4)
+    with pytest.raises(ValueError):
+        HistSpec(n_nodes=2, nbins=0)
+    with pytest.raises(ValueError):
+        HistSpec(n_nodes=2, nbins=4, n_levels=0)
+    with pytest.raises(ValueError):
+        HistSpec(n_nodes=2, nbins=4, backend="cuda")
+    with pytest.raises(ValueError):
+        HistSpec(n_nodes=2, nbins=4, acc_dtype="bfloat16")
+    spec = HistSpec(n_nodes=2, nbins=4, n_levels=3)
+    assert spec.with_levels(1).n_levels == 1
+    assert spec.with_levels(1).n_nodes == spec.n_nodes
+    assert spec.resolved().backend in ("packed", "pallas")
+    assert hash(spec) == hash(HistSpec(n_nodes=2, nbins=4, n_levels=3))
+
+
+def test_hist_levels_shape_mismatch_raises():
+    bins, node, gh = _case(50, 2, 4, 3, 2, seed=4)
+    spec = HistSpec(n_nodes=3, nbins=4, n_levels=3, backend="packed")
+    with pytest.raises(ValueError):
+        ops.hist_levels(bins, node, gh, spec)      # node has 2 levels
+
+
+def test_build_tree_spec_equals_kwargs():
+    """build_tree(spec=...) is the same tree as the legacy kwargs path."""
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(400, 5)), jnp.float32)
+    cand = jnp.sort(jnp.asarray(rng.normal(size=(5, 8)), jnp.float32), 1)
+    from repro.core import binning
+    bins = binning.bin_features(x, cand)
+    gh = jnp.asarray(rng.normal(size=(400, 2)), jnp.float32)
+    gh = gh.at[:, 1].set(jnp.abs(gh[:, 1]) + 0.1)
+
+    legacy = tree_lib.build_tree(bins, gh, cand, max_depth=4, nbins=9,
+                                 backend="packed")
+    spec = HistSpec(n_nodes=8, nbins=9, n_levels=4, backend="packed")
+    new = tree_lib.build_tree(bins, gh, cand, max_depth=4, spec=spec)
+    for a, b in zip(legacy, new):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    with pytest.raises(ValueError):     # conflicting nbins
+        tree_lib.build_tree(bins, gh, cand, max_depth=4, nbins=5, spec=spec)
+    with pytest.raises(ValueError):     # frontier wider than spec
+        tree_lib.build_tree(bins, gh, cand, max_depth=5, spec=spec)
+    with pytest.raises(TypeError):      # neither spec nor nbins
+        tree_lib.build_tree(bins, gh, cand, max_depth=4)

@@ -77,8 +77,8 @@ def test_forest_predict_matches_per_tree_loop():
     for t in m.trees:
         looped = looped + cfg.learning_rate * np.asarray(
             tree_lib.predict_raw(t, x, max_depth=cfg.max_depth))
-    np.testing.assert_allclose(np.asarray(m.predict_margin(x)), looped,
-                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(m.predict(x, output="margin")),
+                               looped, atol=1e-4)
 
 
 def test_host_strategy_stays_outside_scan():
