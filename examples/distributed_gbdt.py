@@ -33,13 +33,22 @@ def main() -> None:
     mesh = Mesh(np.array(jax.devices()).reshape(-1), ("data",))
 
     for strat in ("random", "weighted_quantile"):
+        # telemetry=True: per-round TrainReport with psum'd global loss
+        # stats and the estimated per-round collective payload
         cfg = repro.GBDTConfig(n_trees=10, max_depth=5,
-                               n_candidates=32, strategy=strat)
+                               n_candidates=32, strategy=strat,
+                               telemetry=True)
         m = repro.fit_distributed(xtr, ytr, cfg, mesh,
                                   jax.random.PRNGKey(0))
         acc = repro.accuracy(m, xte, yte)
+        coll = m.report.summarize()["collective_bytes"]
         print(f"  {strat:18s} acc={acc:.4f}  "
               f"({mesh.shape['data']} workers, Algorithm 1)")
+        print(f"  {'':18s} loss {float(m.report.train_loss[0]):.4f} -> "
+              f"{float(m.report.train_loss[-1]):.4f}, "
+              f"~{coll['per_round'] / 1024:.1f} KiB collectives/round "
+              f"(all_gather {coll['all_gather_total'] / 1024:.1f} KiB + "
+              f"psum {coll['psum_total'] / 1024:.1f} KiB total)")
 
     # single-host reference
     cfg = repro.GBDTConfig(n_trees=10, max_depth=5, n_candidates=32)

@@ -16,12 +16,14 @@ from .core.boosting import (GBDTConfig, GBDTModel, accuracy, fit,
 from .core.distributed import fit_distributed
 from .core.tree import Forest, Tree
 from .kernels.ops import HistSpec
+from .obs import TrainReport
 
 __all__ = [
     "Forest",
     "GBDTConfig",
     "GBDTModel",
     "HistSpec",
+    "TrainReport",
     "Tree",
     "accuracy",
     "fit",

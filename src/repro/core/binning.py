@@ -35,8 +35,10 @@ def bin_features(x: jax.Array, candidates: jax.Array) -> jax.Array:
     sorted candidates (both count the candidates strictly below x,
     including ties/duplicates) and ~25x faster through XLA:CPU, which
     vectorises the comparison but not the per-element binary search.
-    NaN inputs differ: searchsorted places NaN at k, the dense count
-    yields 0 (all comparisons false); the pipeline never feeds NaN.
+    NaN rows go to the LAST bin (k) on both paths: searchsorted places
+    NaN at k natively, and the dense count — whose comparisons are all
+    false for NaN — routes it there explicitly, so a NaN never splits
+    left of any finite threshold regardless of k.
 
     Args:
       x: (n, f) raw features.
@@ -45,14 +47,17 @@ def bin_features(x: jax.Array, candidates: jax.Array) -> jax.Array:
     Returns:
       (n, f) int32 bin ids in [0, k].
     """
-    if candidates.shape[1] <= _DENSE_K_MAX:
-        return (x[:, :, None] > candidates[None, :, :]).astype(
-            jnp.int32).sum(axis=2)
+    with jax.named_scope("repro.bin_features"):
+        k = candidates.shape[1]
+        if k <= _DENSE_K_MAX:
+            dense = (x[:, :, None] > candidates[None, :, :]).astype(
+                jnp.int32).sum(axis=2)
+            return jnp.where(jnp.isnan(x), k, dense)
 
-    def per_feature(col, cand):
-        return jnp.searchsorted(cand, col, side="left").astype(jnp.int32)
+        def per_feature(col, cand):
+            return jnp.searchsorted(cand, col, side="left").astype(jnp.int32)
 
-    return jax.vmap(per_feature, in_axes=(1, 0), out_axes=1)(x, candidates)
+        return jax.vmap(per_feature, in_axes=(1, 0), out_axes=1)(x, candidates)
 
 
 @partial(jax.jit, static_argnames=("nbins",))

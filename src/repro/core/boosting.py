@@ -36,6 +36,7 @@ import numpy as np
 
 from . import binning, proposal, tree as tree_lib
 from ..kernels.ops import HistSpec
+from ..obs import TrainReport, round_report
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,6 +52,7 @@ class GBDTConfig:
     objective: str = "logistic"         # 'logistic' | 'mse'
     repropose_each_round: bool = True   # paper re-proposes per iteration
     backend: str = "auto"               # kernel backend
+    telemetry: bool = False             # per-round TrainReport (repro.obs)
 
     @property
     def nbins(self) -> int:
@@ -70,11 +72,18 @@ class GBDTModel:
     config: GBDTConfig
     forest: tree_lib.Forest             # stacked (n_trees, ...) ensemble
     base_score: float
-    candidates: jax.Array               # (rounds_proposed, f, k)
+    candidates: jax.Array               # (rounds_proposed, f, k): n_trees
+    #                                     when re-proposing a traceable
+    #                                     strategy each round, else 1
+    #                                     (fixed grid — host-side
+    #                                     strategies are x-only).  Both
+    #                                     trainers follow this convention.
     proposal_seconds: float = 0.0       # host-side strategies only; the
     #                                     scanned strategies propose
     #                                     inside the compiled loop
     fit_seconds: float = 0.0
+    report: TrainReport | None = None   # per-round telemetry when
+    #                                     config.telemetry is on
 
     @property
     def trees(self) -> list[tree_lib.Tree]:
@@ -174,20 +183,30 @@ def _fit_scanned(x, y, keys, margin0, fixed_c, *, cfg: GBDTConfig,
     the fit-wide :class:`HistSpec` (already resolved), the one static
     handle the tree builder needs instead of loose kernel kwargs.
 
-    Returns (forest, candidates, margin); candidates has a leading axis
-    of n_trees when re-proposing inside the scan, else 1.
+    Returns (forest, candidates, margin, report); candidates has a
+    leading axis of n_trees when re-proposing inside the scan, else 1.
+    ``report`` is a stacked :class:`repro.obs.TrainReport` when
+    ``cfg.telemetry`` is on, else None — the per-round rows ride the
+    scan as extra outputs, so the telemetry-off graph (and the one
+    round-step trace) is unchanged.
     """
     def grow(margin, bins, cands):
         g, h = grad_hess(margin, y, cfg.objective)
-        t, node = tree_lib.build_tree(
+        built = tree_lib.build_tree(
             bins, jnp.stack([g, h], 1), cands,
             max_depth=cfg.max_depth, l2=cfg.l2,
             gamma=cfg.gamma, min_child_weight=cfg.min_child_weight,
-            spec=spec, return_leaf_nodes=True)
+            spec=spec, return_leaf_nodes=True,
+            return_stats=cfg.telemetry)
+        t, node = built[0], built[1]
         # growth already routed every row to its leaf — gather the leaf
         # values directly instead of re-descending with predict_binned
         margin = margin + cfg.learning_rate * t.leaf_value[node]
-        return margin, t
+        rep = None
+        if cfg.telemetry:
+            rep = round_report(margin=margin, y=y, g=g, h=h,
+                               objective=cfg.objective, stats=built[2])
+        return margin, t, rep
 
     in_scan = cfg.repropose_each_round and fixed_c is None
     if in_scan:
@@ -197,11 +216,12 @@ def _fit_scanned(x, y, keys, margin0, fixed_c, *, cfg: GBDTConfig,
             c = proposal.propose(cfg.strategy, x, cfg.n_candidates,
                                  key=key_r, hess=h)
             bins = binning.bin_features(x, c)
-            margin, t = grow(margin, bins, c)
-            return margin, (t, c)
+            margin, t, rep = grow(margin, bins, c)
+            return margin, (t, c, rep)
 
-        margin, (trees, cands) = jax.lax.scan(round_step, margin0, keys)
-        return tree_lib.Forest(*trees), cands, margin
+        margin, (trees, cands, report) = jax.lax.scan(
+            round_step, margin0, keys)
+        return tree_lib.Forest(*trees), cands, margin, report
 
     # fixed candidate grid: host-side strategies (candidates passed in)
     # or repropose_each_round=False (proposed once from round-0 stats)
@@ -213,11 +233,11 @@ def _fit_scanned(x, y, keys, margin0, fixed_c, *, cfg: GBDTConfig,
 
     def round_step(margin, _key_r):
         _bump_round_traces()
-        margin, t = grow(margin, bins, fixed_c)
-        return margin, t
+        margin, t, rep = grow(margin, bins, fixed_c)
+        return margin, (t, rep)
 
-    margin, trees = jax.lax.scan(round_step, margin0, keys)
-    return tree_lib.Forest(*trees), fixed_c[None], margin
+    margin, (trees, report) = jax.lax.scan(round_step, margin0, keys)
+    return tree_lib.Forest(*trees), fixed_c[None], margin, report
 
 
 def fit(x: jax.Array, y: jax.Array, cfg: GBDTConfig,
@@ -251,12 +271,13 @@ def fit(x: jax.Array, y: jax.Array, cfg: GBDTConfig,
             key=jax.random.fold_in(key, 0))))
         proposal_s = time.perf_counter() - t0
 
-    forest, cands, margin = _fit_scanned(x, y, keys, margin0, fixed_c,
-                                         cfg=cfg, spec=spec)
+    forest, cands, margin, report = _fit_scanned(
+        x, y, keys, margin0, fixed_c, cfg=cfg, spec=spec)
     jax.block_until_ready(margin)
     return GBDTModel(cfg, forest, base, cands,
                      proposal_seconds=proposal_s,
-                     fit_seconds=time.perf_counter() - t_fit0)
+                     fit_seconds=time.perf_counter() - t_fit0,
+                     report=report)
 
 
 def fit_reference(x: jax.Array, y: jax.Array, cfg: GBDTConfig,
@@ -279,10 +300,14 @@ def fit_reference(x: jax.Array, y: jax.Array, cfg: GBDTConfig,
     cands: list[jax.Array] = []
     proposal_s = 0.0
     bins = None
+    # host-side strategies are x-only (identical candidates every round),
+    # so propose once: model.candidates is (1, f, k), matching fit()
+    repropose = (cfg.repropose_each_round
+                 and cfg.strategy in proposal.TRACEABLE)
 
     for r in range(cfg.n_trees):
         g, h = grad_hess(margin, y, cfg.objective)
-        if cfg.repropose_each_round or r == 0:
+        if repropose or r == 0:
             t0 = time.perf_counter()
             c = proposal.propose(cfg.strategy, x, cfg.n_candidates,
                                  key=jax.random.fold_in(key, r), hess=h)

@@ -95,13 +95,28 @@ def resample_gathered(key: jax.Array, gathered: jax.Array, k: int) -> jax.Array:
 # Baselines ("data faithful").
 # ---------------------------------------------------------------------------
 
+def _pad_candidates(c: np.ndarray, k: int) -> np.ndarray:
+    """Right-pad a (possibly empty) candidate row to length k.
+
+    Degenerate features — constant columns, empty inputs — can yield
+    zero candidates, where ``np.pad(..., mode='edge')`` raises; an
+    all-zero row is harmless (binning collapses duplicate candidates
+    into empty bins, so the feature is simply never split on).
+    """
+    c = np.asarray(c, dtype=np.float32)
+    if len(c) >= k:
+        return c[:k]
+    if len(c) == 0:
+        return np.zeros(k, dtype=np.float32)
+    return np.pad(c, (0, k - len(c)), mode="edge")
+
+
 def gk_quantile_candidates(x: np.ndarray, k: int) -> np.ndarray:
     """GK-summary candidates per feature (host-side; deliberately costly)."""
     x = np.asarray(x)
     out = np.empty((x.shape[1], k), dtype=np.float32)
     for j in range(x.shape[1]):
-        c = sketch.gk_candidates(x[:, j], k)
-        out[j] = np.pad(c, (0, k - len(c)), mode="edge") if len(c) < k else c[:k]
+        out[j] = _pad_candidates(sketch.gk_candidates(x[:, j], k), k)
     return out
 
 
@@ -134,7 +149,7 @@ def exact_candidates(x: np.ndarray, k: int) -> np.ndarray:
             idx = np.linspace(0, len(u) - 1, k).round().astype(int)
             out[j] = u[idx]
         else:
-            out[j] = np.pad(u, (0, k - len(u)), mode="edge")
+            out[j] = _pad_candidates(u, k)
     return out
 
 

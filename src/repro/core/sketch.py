@@ -89,7 +89,13 @@ class GKSummary:
         return self._v[-1]
 
     def candidates(self, k: int) -> np.ndarray:
-        """k split candidates at evenly spaced quantiles (the XGBoost use)."""
+        """k split candidates at evenly spaced quantiles (the XGBoost use).
+
+        An empty summary has no quantiles: returns a zero-length array
+        (the proposer pads it; ``query`` would raise).
+        """
+        if self.n == 0:
+            return np.empty((0,), dtype=np.float32)
         self.compress()
         phis = (np.arange(1, k + 1)) / (k + 1)
         return np.array(sorted({self.query(p) for p in phis}), dtype=np.float32)

@@ -37,6 +37,18 @@ class Tree(NamedTuple):
     leaf_value: jax.Array  # (2^depth,) float32
 
 
+class TreeStats(NamedTuple):
+    """Per-tree growth telemetry (all 0-d arrays, scan-stackable).
+
+    Derived from the same (psum'd, in the distributed trainer) gain
+    panel the splits themselves come from, so it is replicated across
+    workers and adding it cannot change the grown tree.
+    """
+    n_splits: jax.Array    # () int32 — realized (gain > 0) splits
+    gain_sum: jax.Array    # () float32 — sum of realized split gains
+    gain_max: jax.Array    # () float32 — largest realized gain (0 if none)
+
+
 class Forest(NamedTuple):
     """A boosted ensemble as a struct-of-arrays: every field of Tree
     stacked along a leading round axis.  Static-shaped in (n_trees,
@@ -68,14 +80,15 @@ def _level_slice(depth: int) -> slice:
 
 @functools.partial(jax.jit, static_argnames=(
     "max_depth", "nbins", "l2", "gamma", "min_child_weight", "backend",
-    "spec", "axis_name", "return_leaf_nodes"))
+    "spec", "axis_name", "return_leaf_nodes", "return_stats"))
 def build_tree(bins: jax.Array, gh: jax.Array, candidates: jax.Array, *,
                max_depth: int, nbins: int | None = None, l2: float = 1.0,
                gamma: float = 0.0, min_child_weight: float = 1e-6,
                backend: str = "auto",
                spec: HistSpec | None = None,
                axis_name: str | None = None,
-               return_leaf_nodes: bool = False):
+               return_leaf_nodes: bool = False,
+               return_stats: bool = False):
     """Grow one tree on binned data.
 
     The level loop is a ``lax.scan`` over a *uniform* frontier of
@@ -105,10 +118,15 @@ def build_tree(bins: jax.Array, gh: jax.Array, candidates: jax.Array, *,
         already routes every row to its leaf, so the scanned boosting
         trainers read the margin update as ``leaf_value[node]`` instead
         of re-descending the tree with predict_binned.
+      return_stats: also return a :class:`TreeStats` (realized split
+        count + gain summary) computed from the per-level gain panels.
+        Static flag: the telemetry-off graph is unchanged.
 
     Returns:
-      A :class:`Tree`, or ``(Tree, node)`` with ``node`` the (n,) int32
-      leaf assignment when ``return_leaf_nodes`` is set.
+      A :class:`Tree`, extended to ``(Tree, node)`` when
+      ``return_leaf_nodes`` is set and further to ``(..., stats)`` when
+      ``return_stats`` is set (``node`` is the (n,) int32 leaf
+      assignment, ``stats`` the :class:`TreeStats`).
     """
     frontier = 2 ** max(max_depth - 1, 0)
     if spec is None:
@@ -159,12 +177,26 @@ def build_tree(bins: jax.Array, gh: jax.Array, candidates: jax.Array, *,
             bins, lvl_feature.clip(0)[node][:, None], axis=1)[:, 0]
         go_left = row_bin <= lvl_sbin[node]
         node = node * 2 + jnp.where(go_left, 0, 1)
-        return node, (lvl_feature, lvl_sbin, lvl_thresh)
+        ys = (lvl_feature, lvl_sbin, lvl_thresh)
+        if return_stats:
+            # unpopulated frontier tail nodes have all-zero histograms
+            # and never split, so summing the full frontier is exact
+            realized = jnp.where(do_split, best_gain, 0.0)
+            ys += ((jnp.sum(do_split.astype(jnp.int32)),
+                    jnp.sum(realized), jnp.max(realized)),)
+        return node, ys
 
+    stats = TreeStats(jnp.int32(0), jnp.float32(0.0), jnp.float32(0.0))
     node = jnp.zeros((n,), jnp.int32)          # level-local node id
     if max_depth > 0:
-        node, (feats, sbins_l, threshs) = jax.lax.scan(
-            level_step, node, None, length=max_depth)
+        node, ys = jax.lax.scan(level_step, node, None, length=max_depth)
+        if return_stats:
+            feats, sbins_l, threshs, (ns_l, gs_l, gm_l) = ys
+            stats = TreeStats(jnp.sum(ns_l).astype(jnp.int32),
+                              jnp.sum(gs_l).astype(jnp.float32),
+                              jnp.max(gm_l).astype(jnp.float32))
+        else:
+            feats, sbins_l, threshs = ys
 
     feature = jnp.full((n_inner,), -1, jnp.int32)
     split_bin = jnp.full((n_inner,), nbins - 1, jnp.int32)
@@ -188,9 +220,12 @@ def build_tree(bins: jax.Array, gh: jax.Array, candidates: jax.Array, *,
     leaf_value = -seg[:, 0] / (seg[:, 1] + l2)
     tree = Tree(feature, split_bin, threshold,
                 leaf_value.astype(jnp.float32))
+    out = (tree,)
     if return_leaf_nodes:
-        return tree, node
-    return tree
+        out += (node,)
+    if return_stats:
+        out += (stats,)
+    return out if len(out) > 1 else tree
 
 
 def _descend_binned(tree: Tree, bins: jax.Array, max_depth: int) -> jax.Array:

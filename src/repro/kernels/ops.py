@@ -127,15 +127,21 @@ def hist_levels(bins, node_per_level, gh, spec: HistSpec):
             f"node_per_level must be (n_levels={spec.n_levels}, n), got "
             f"shape {node_per_level.shape}")
     backend = resolve(spec.backend)
-    if backend == "packed":
-        return ref.hist_levels_packed(bins, node_per_level, gh,
-                                      n_nodes=spec.n_nodes, nbins=spec.nbins)
-    if backend == "ref":
-        return ref.hist_levels_ref(bins, node_per_level, gh,
-                                   n_nodes=spec.n_nodes, nbins=spec.nbins)
-    return hist_levels_pallas(bins, node_per_level, gh,
-                              n_nodes=spec.n_nodes, nbins=spec.nbins,
-                              interpret=(backend == "interpret"))
+    # named_scope: the hot-loop kernels show up as one annotated region
+    # per op in profiler traces (jax.profiler / perfetto), keyed by
+    # backend so packed-vs-pallas time is separable
+    with jax.named_scope(f"repro.hist_levels[{backend}]"):
+        if backend == "packed":
+            return ref.hist_levels_packed(bins, node_per_level, gh,
+                                          n_nodes=spec.n_nodes,
+                                          nbins=spec.nbins)
+        if backend == "ref":
+            return ref.hist_levels_ref(bins, node_per_level, gh,
+                                       n_nodes=spec.n_nodes,
+                                       nbins=spec.nbins)
+        return hist_levels_pallas(bins, node_per_level, gh,
+                                  n_nodes=spec.n_nodes, nbins=spec.nbins,
+                                  interpret=(backend == "interpret"))
 
 
 def hist(bins, node, gh, *, n_nodes: int, nbins: int,
@@ -155,12 +161,13 @@ def split_gain(hist_arr, *, l2: float = 1.0, gamma: float = 0.0,
                min_child_weight: float = 1e-6, backend: str = "auto"):
     """Best (gain, bin) per (node, feature) from a histogram."""
     backend = resolve(backend)
-    if backend in ("ref", "packed"):    # 'packed' only specialises hist
-        return ref.split_gain_ref(hist_arr, l2=l2, gamma=gamma,
-                                  min_child_weight=min_child_weight)
-    return split_gain_pallas(hist_arr, l2=l2, gamma=gamma,
-                             min_child_weight=min_child_weight,
-                             interpret=(backend == "interpret"))
+    with jax.named_scope(f"repro.split_gain[{backend}]"):
+        if backend in ("ref", "packed"):  # 'packed' only specialises hist
+            return ref.split_gain_ref(hist_arr, l2=l2, gamma=gamma,
+                                      min_child_weight=min_child_weight)
+        return split_gain_pallas(hist_arr, l2=l2, gamma=gamma,
+                                 min_child_weight=min_child_weight,
+                                 interpret=(backend == "interpret"))
 
 
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,

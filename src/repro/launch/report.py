@@ -1,7 +1,10 @@
 """Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from the
-dry-run artifacts.
+dry-run artifacts, and the §Telemetry table from the fit50 record in
+BENCH_gbdt_step.json (the TrainReport summary written by
+``benchmarks/bench_gbdt_step.py --update``).
 
 Usage: python -m repro.launch.report [--dir experiments/dryrun]
+                                     [--section dryrun|roofline|telemetry|all]
 Prints markdown to stdout (the EXPERIMENTS.md sections are refreshed by
 piping this output).
 """
@@ -67,20 +70,49 @@ def roofline_table(recs: list[dict]) -> str:
     return "\n".join(out)
 
 
+def telemetry_table(rec: dict) -> str:
+    """Markdown view of the BENCH_gbdt_step.json telemetry block."""
+    tel = rec.get("telemetry")
+    if not tel:
+        return "(no telemetry block — rerun bench_gbdt_step.py --update)"
+    s = tel["summary"]
+    wl = rec.get("workload", {})
+    out = ["| workload | warm fit s | overhead vs plain | loss first→final | "
+           "splits total | best gain max |",
+           "|---|---|---|---|---|---|",
+           f"| n={wl.get('n')} T={wl.get('n_trees')} "
+           f"d={wl.get('max_depth')} | {tel['warm_fit_s']} | "
+           f"{tel['overhead_pct_vs_scanned_warm']:+.1f}% | "
+           f"{s['train_loss']['first']:.4f}→{s['train_loss']['final']:.4f} | "
+           f"{s['splits']['total']} | {s['best_gain']['max']:.2f} |"]
+    return "\n".join(out)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="experiments/dryrun")
-    ap.add_argument("--section", choices=["dryrun", "roofline", "both"],
+    ap.add_argument("--section",
+                    choices=["dryrun", "roofline", "telemetry", "both",
+                             "all"],
                     default="both")
+    ap.add_argument("--bench-json",
+                    default=os.path.join(os.path.dirname(__file__), "..",
+                                         "..", "..", "BENCH_gbdt_step.json"),
+                    help="fit50 record for the telemetry section")
     args = ap.parse_args()
     recs = load(args.dir)
-    if args.section in ("dryrun", "both"):
+    if args.section in ("dryrun", "both", "all"):
         print("## §Dry-run\n")
         print(dryrun_table(recs))
         print()
-    if args.section in ("roofline", "both"):
+    if args.section in ("roofline", "both", "all"):
         print("## §Roofline (single-pod 16x16, per-chip terms)\n")
         print(roofline_table(recs))
+        print()
+    if args.section in ("telemetry", "all"):
+        print("## §Telemetry (fit50 TrainReport)\n")
+        with open(args.bench_json) as fh:
+            print(telemetry_table(json.load(fh)))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,16 @@
+"""Training observability: per-round telemetry for the GBDT trainers.
+
+``TrainReport`` is the struct-of-arrays of per-round scalars that the
+scanned trainers emit when ``GBDTConfig.telemetry`` is on; see
+:mod:`repro.obs.report` for the field reference and the JSON schema.
+"""
+
+from .report import (TrainReport, collective_bytes_per_round,
+                     mean_train_loss, round_report)
+
+__all__ = [
+    "TrainReport",
+    "collective_bytes_per_round",
+    "mean_train_loss",
+    "round_report",
+]

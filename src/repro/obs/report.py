@@ -1,0 +1,214 @@
+"""Per-round training telemetry: the :class:`TrainReport` struct-of-arrays.
+
+The scanned trainers (``boosting.fit``, ``distributed.fit_distributed``)
+emit one :class:`TrainReport` row per boosting round as *additional*
+``lax.scan`` outputs of the round step, behind ``GBDTConfig.telemetry``.
+Because the report rides the existing scan it costs nothing when off
+(the flag is a static jit argument — the telemetry-off program is the
+exact pre-telemetry graph) and preserves the O(1)-compile property when
+on (still one round-step trace regardless of ``n_trees``).
+
+Every field is derived from intermediates the trainer already computes
+(grad/hess panel, the psum'd split-gain panel), so enabling telemetry
+cannot change the numerics of the fitted forest — the equivalence tests
+in tests/test_scan_trainer.py pin that.
+
+Fields (all shape ``(n_trees,)``, one entry per round):
+
+  train_loss        mean train loss after the round's margin update
+                    (logistic: mean log-loss; mse: mean 0.5*(m-y)^2)
+  grad_norm         L2 norm of the gradient vector at round start
+  hess_norm         L2 norm of the hessian vector at round start
+  n_splits          realized (gain > 0) splits in the round's tree
+  best_gain_max     largest realized split gain in the tree (0 if none)
+  best_gain_mean    mean realized split gain (0 if no splits)
+  all_gather_bytes  estimated all_gather payload per worker for the
+                    round's candidate proposal (0 on a single host)
+  psum_bytes        estimated psum payload per worker for the round's
+                    histogram / leaf reductions (0 on a single host)
+
+The distributed byte fields are *estimates* computed host-side from
+static shapes (:func:`collective_bytes_per_round`) in the spirit of
+Huang & Yi's communication-cost accounting — they count the logical
+collective payload, not wire-level implementation detail.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class TrainReport(NamedTuple):
+    """Struct-of-arrays of per-round training scalars (see module doc)."""
+    train_loss: jax.Array
+    grad_norm: jax.Array
+    hess_norm: jax.Array
+    n_splits: jax.Array
+    best_gain_max: jax.Array
+    best_gain_mean: jax.Array
+    all_gather_bytes: jax.Array
+    psum_bytes: jax.Array
+
+    @property
+    def n_rounds(self) -> int:
+        return int(self.train_loss.shape[0])
+
+    def to_dict(self) -> dict:
+        """Full per-round record as JSON-ready lists."""
+        out = {}
+        for name, arr in self._asdict().items():
+            a = np.asarray(arr)
+            out[name] = [int(v) for v in a] if np.issubdtype(
+                a.dtype, np.integer) else [float(v) for v in a]
+        return out
+
+    def summarize(self) -> dict:
+        """Host-side scalar summary (everything JSON-serialisable)."""
+        loss = np.asarray(self.train_loss, np.float64)
+        gnorm = np.asarray(self.grad_norm, np.float64)
+        splits = np.asarray(self.n_splits)
+        gmax = np.asarray(self.best_gain_max, np.float64)
+        ag = np.asarray(self.all_gather_bytes, np.float64)
+        ps = np.asarray(self.psum_bytes, np.float64)
+        return {
+            "n_rounds": self.n_rounds,
+            "train_loss": {"first": float(loss[0]), "final": float(loss[-1]),
+                           "min": float(loss.min())},
+            "grad_norm": {"first": float(gnorm[0]), "final": float(gnorm[-1])},
+            "splits": {"total": int(splits.sum()),
+                       "mean_per_tree": float(splits.mean()),
+                       "min": int(splits.min()), "max": int(splits.max())},
+            "best_gain": {"max": float(gmax.max()),
+                          "final": float(gmax[-1])},
+            "collective_bytes": {"all_gather_total": float(ag.sum()),
+                                 "psum_total": float(ps.sum()),
+                                 "per_round": float((ag + ps).mean())},
+        }
+
+    def to_json(self, path: str | None = None, *, indent: int = 1) -> str:
+        """Serialise the full report (+ summary) to JSON; optionally write
+        it to ``path``.  Schema is pinned by tests/test_telemetry.py."""
+        rec = {"schema": "repro.obs.TrainReport/v1",
+               "n_rounds": self.n_rounds,
+               "rounds": self.to_dict(),
+               "summary": self.summarize()}
+        s = json.dumps(rec, indent=indent)
+        if path is not None:
+            with open(path, "w") as fh:
+                fh.write(s)
+        return s
+
+
+def mean_train_loss(margin, y, objective: str, *, weight=None,
+                    n_global: int | None = None, psum=None):
+    """Mean train loss of ``margin`` vs ``y`` (traceable).
+
+    ``weight`` masks rows out of the mean (distributed padding);
+    ``n_global`` is the true global row count and ``psum`` the cross-
+    worker reduction — both default to the single-host interpretation.
+    """
+    if objective == "logistic":
+        per_row = jax.nn.softplus(margin) - y * margin
+    elif objective == "mse":
+        per_row = 0.5 * (margin - y) ** 2
+    else:
+        raise ValueError(f"unknown objective {objective!r}")
+    if weight is not None:
+        per_row = per_row * weight
+    total = jnp.sum(per_row)
+    if psum is not None:
+        total = psum(total)
+    n = margin.shape[0] if n_global is None else n_global
+    return total / n
+
+
+def round_report(*, margin, y, g, h, objective: str, stats,
+                 n_global: int | None = None, weight=None,
+                 psum=None) -> TrainReport:
+    """Build one round's TrainReport row (all 0-d arrays, scan-stackable).
+
+    Args:
+      margin: post-update margin (the round's loss is measured after its
+        tree is applied).
+      g, h: the grad/hess panel the round's tree was built from (already
+        masked by ``weight`` in the distributed trainer).
+      stats: :class:`repro.core.tree.TreeStats` from ``build_tree``.
+      n_global / weight / psum: distributed plumbing, as in
+        :func:`mean_train_loss`.
+
+    The collective-byte fields are zero here; the distributed driver
+    fills them host-side from :func:`collective_bytes_per_round`.
+    """
+    sq_g = jnp.sum(g * g)
+    sq_h = jnp.sum(h * h)
+    if psum is not None:
+        sq_g, sq_h = psum(sq_g), psum(sq_h)
+    loss = mean_train_loss(margin, y, objective, weight=weight,
+                           n_global=n_global, psum=psum)
+    mean_gain = stats.gain_sum / jnp.maximum(
+        stats.n_splits.astype(jnp.float32), 1.0)
+    zero = jnp.float32(0.0)
+    return TrainReport(
+        train_loss=loss.astype(jnp.float32),
+        grad_norm=jnp.sqrt(sq_g).astype(jnp.float32),
+        hess_norm=jnp.sqrt(sq_h).astype(jnp.float32),
+        n_splits=stats.n_splits.astype(jnp.int32),
+        best_gain_max=stats.gain_max.astype(jnp.float32),
+        best_gain_mean=mean_gain.astype(jnp.float32),
+        all_gather_bytes=zero,
+        psum_bytes=zero,
+    )
+
+
+def collective_bytes_per_round(cfg, n_features: int, n_workers: int,
+                               *, dtype_bytes: int = 4):
+    """Estimated per-worker collective payload, one entry per round.
+
+    Counts the logical payload each worker *receives* per round of
+    ``distributed.fit_distributed``:
+
+      all_gather — the candidate-proposal gather (Algorithm 1's
+        AllReduce-combine step): ``W * f * k`` floats for the
+        pool-resample ('random') and quantile-merge strategies; zero for
+        'uniform_range' (its pmin/pmax ride the psum column).
+      psum — the per-level histogram AllReduce
+        (``max_depth * frontier * f * nbins * 2`` floats), the leaf
+        grad/hess segment reduction (``2^max_depth * 2``), the
+        uniform_range pmin/pmax (``2 * f``) when applicable, and the
+        telemetry scalar reductions (3 floats) when telemetry is on.
+
+    With ``repropose_each_round=False`` the proposal collectives only
+    happen in round 0; later rounds reuse the round-0 candidate grid.
+
+    Returns:
+      ``(all_gather_bytes, psum_bytes)`` — two ``(n_trees,)`` float32
+      numpy arrays, ready to splice into a :class:`TrainReport`.
+    """
+    k = cfg.n_candidates
+    nbins = cfg.nbins
+    frontier = 2 ** max(cfg.max_depth - 1, 0)
+
+    if cfg.strategy in ("random", "weighted_quantile", "gk_quantile"):
+        ag_prop = n_workers * n_features * k * dtype_bytes
+        ps_prop = 0
+    elif cfg.strategy == "uniform_range":
+        ag_prop = 0
+        ps_prop = 2 * n_features * dtype_bytes          # pmin + pmax
+    else:
+        ag_prop, ps_prop = 0, 0
+
+    ps_tree = (cfg.max_depth * frontier * n_features * nbins * 2
+               + 2 ** cfg.max_depth * 2) * dtype_bytes
+    ps_telemetry = 3 * dtype_bytes if getattr(cfg, "telemetry", False) else 0
+
+    ag = np.zeros(cfg.n_trees, np.float32)
+    ps = np.full(cfg.n_trees, ps_tree + ps_telemetry, np.float32)
+    prop_rounds = slice(None) if cfg.repropose_each_round else slice(0, 1)
+    ag[prop_rounds] += ag_prop
+    ps[prop_rounds] += ps_prop
+    return ag, ps

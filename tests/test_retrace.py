@@ -43,6 +43,22 @@ def test_doubling_n_trees_does_not_retrace_more():
     assert t_quad == t_small
 
 
+def test_telemetry_round_step_traces_o1():
+    """The ROADMAP rule for new jitted entry points: the telemetry-
+    enabled round step (TrainReport rows as extra scan outputs) must
+    keep the O(1)-in-n_trees compile property of the plain one."""
+    x, y = _toy(seed=3)
+    base = dict(max_depth=4, n_candidates=16, telemetry=True)
+    t_small = _fit_traces(x, y, boosting.GBDTConfig(n_trees=4, **base))
+    t_double = _fit_traces(x, y, boosting.GBDTConfig(n_trees=8, **base))
+    t_quad = _fit_traces(x, y, boosting.GBDTConfig(n_trees=16, **base))
+    assert t_small == 1, t_small
+    assert t_double == t_small
+    assert t_quad == t_small
+    # refit with unchanged config: jit cache hit, zero new traces
+    assert _fit_traces(x, y, boosting.GBDTConfig(n_trees=4, **base)) == 0
+
+
 def test_refit_same_config_hits_jit_cache():
     x, y = _toy(seed=1)
     cfg = boosting.GBDTConfig(n_trees=4, max_depth=4, n_candidates=16)

@@ -56,6 +56,23 @@ def test_scanned_fit_matches_reference(strategy):
         pytest.approx(boosting.accuracy(m_ref, x, y), abs=1e-6)
 
 
+@pytest.mark.parametrize("strategy", ["random", "weighted_quantile"])
+def test_scanned_fit_with_telemetry_matches_reference(strategy):
+    """Telemetry rows ride the scan as extra outputs — turning them on
+    must not change a single split or leaf vs the unrolled oracle."""
+    x, y = _toy(seed=8)
+    cfg = boosting.GBDTConfig(n_trees=6, max_depth=4, n_candidates=16,
+                              strategy=strategy, telemetry=True)
+    key = jax.random.PRNGKey(3)
+    m_scan = boosting.fit(x, y, cfg, key)
+    m_ref = boosting.fit_reference(
+        x, y, boosting.GBDTConfig(n_trees=6, max_depth=4, n_candidates=16,
+                                  strategy=strategy), key)
+    _assert_forests_match(m_scan.forest, m_ref.forest)
+    assert m_scan.report is not None
+    assert m_scan.report.n_rounds == cfg.n_trees
+
+
 def test_scanned_fit_matches_reference_no_repropose():
     x, y = _toy(seed=2)
     cfg = boosting.GBDTConfig(n_trees=5, max_depth=4, n_candidates=16,
@@ -93,6 +110,12 @@ def test_host_strategy_stays_outside_scan():
     m_ref = boosting.fit_reference(x, y, cfg, key)
     _assert_forests_match(m_scan.forest, m_ref.forest)
     assert m_scan.proposal_seconds > 0.0       # timed host proposal
+    # host-side strategies are x-only: BOTH trainers report the single
+    # proposed grid as (1, f, k) — the unified leading-axis convention
+    assert m_scan.candidates.shape == (1, 4, 8)
+    assert m_ref.candidates.shape == (1, 4, 8)
+    np.testing.assert_allclose(np.asarray(m_scan.candidates),
+                               np.asarray(m_ref.candidates), atol=1e-6)
 
 
 # ---------------------------------------------------------------------------

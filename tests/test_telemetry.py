@@ -1,0 +1,174 @@
+"""The repro.obs telemetry layer (TrainReport).
+
+Pins: (1) telemetry is off by default and costs nothing (report is None,
+forest identical), (2) with telemetry on the scanned trainer emits one
+TrainReport row per round whose fields are internally consistent with
+the fitted forest, (3) the JSON schema and host-side summary, (4) the
+distributed collective-byte estimator.
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro import obs
+from repro.core import boosting, tree as tree_lib
+
+
+def _toy(n=2000, f=5, seed=0):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (n, f))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (f,))
+    y = (x @ w > 0).astype(jnp.float32)
+    return x, y
+
+
+def _cfg(**kw):
+    base = dict(n_trees=5, max_depth=4, n_candidates=16)
+    base.update(kw)
+    return repro.GBDTConfig(**base)
+
+
+def test_telemetry_off_by_default():
+    x, y = _toy()
+    m = repro.fit(x, y, _cfg(), jax.random.PRNGKey(0))
+    assert m.config.telemetry is False
+    assert m.report is None
+
+
+def test_report_shapes_and_consistency():
+    x, y = _toy(seed=1)
+    cfg = _cfg(telemetry=True)
+    m = repro.fit(x, y, cfg, jax.random.PRNGKey(0))
+    rep = m.report
+    assert isinstance(rep, repro.TrainReport)
+    assert rep.n_rounds == cfg.n_trees
+    for field in rep:
+        assert field.shape == (cfg.n_trees,)
+
+    n_splits = np.asarray(rep.n_splits)
+    # n_splits is exactly the number of non-passthrough inner nodes of
+    # each fitted tree — the report describes the forest it rode with
+    realized = (np.asarray(m.forest.feature) >= 0).sum(axis=1)
+    np.testing.assert_array_equal(n_splits, realized)
+    assert (n_splits <= 2 ** cfg.max_depth - 1).all()
+
+    gains_max = np.asarray(rep.best_gain_max)
+    gains_mean = np.asarray(rep.best_gain_mean)
+    assert (gains_max >= gains_mean).all() and (gains_mean >= 0).all()
+    assert (np.asarray(rep.grad_norm) > 0).all()
+    assert (np.asarray(rep.hess_norm) > 0).all()
+    # single host: no collectives
+    assert (np.asarray(rep.all_gather_bytes) == 0).all()
+    assert (np.asarray(rep.psum_bytes) == 0).all()
+
+
+def test_loss_curve_decreases_on_learnable_data():
+    x, y = _toy(seed=2)
+    m = repro.fit(x, y, _cfg(n_trees=8, telemetry=True),
+                  jax.random.PRNGKey(0))
+    loss = np.asarray(m.report.train_loss)
+    assert loss[-1] < loss[0]
+    # post-update loss of round 0 equals an independent evaluation
+    margin0 = float(np.asarray(obs.mean_train_loss(
+        jnp.asarray(m.base_score
+                    + m.config.learning_rate * np.asarray(
+                        tree_lib.predict_raw(m.trees[0], x,
+                                             max_depth=m.config.max_depth)),
+                    jnp.float32),
+        y, "logistic")))
+    assert loss[0] == pytest.approx(margin0, abs=1e-5)
+
+
+def test_telemetry_does_not_change_the_forest():
+    x, y = _toy(seed=3)
+    key = jax.random.PRNGKey(4)
+    m_on = repro.fit(x, y, _cfg(telemetry=True), key)
+    m_off = repro.fit(x, y, _cfg(), key)
+    for a, b in zip(m_on.forest, m_off.forest):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_mean_train_loss_matches_numpy():
+    rng = np.random.default_rng(0)
+    margin = rng.normal(size=64).astype(np.float32)
+    y = (rng.random(64) > 0.5).astype(np.float32)
+    got = float(obs.mean_train_loss(jnp.asarray(margin), jnp.asarray(y),
+                                    "logistic"))
+    p = 1 / (1 + np.exp(-margin.astype(np.float64)))
+    want = -(y * np.log(p) + (1 - y) * np.log(1 - p)).mean()
+    assert got == pytest.approx(want, rel=1e-5)
+    got_mse = float(obs.mean_train_loss(jnp.asarray(margin),
+                                        jnp.asarray(y), "mse"))
+    assert got_mse == pytest.approx(0.5 * ((margin - y) ** 2).mean(),
+                                    rel=1e-5)
+    with pytest.raises(ValueError, match="unknown objective"):
+        obs.mean_train_loss(jnp.asarray(margin), jnp.asarray(y), "huber")
+
+
+def test_build_tree_return_stats_matches_tree():
+    x, y = _toy(800, 4, seed=5)
+    key = jax.random.PRNGKey(1)
+    from repro.core import binning, proposal
+    c = proposal.propose("random", x, 8, key=key)
+    bins = binning.bin_features(x, c)
+    g, h = boosting.grad_hess(jnp.zeros(x.shape[0]), y, "logistic")
+    spec = repro.HistSpec(n_nodes=8, nbins=9, n_levels=4).resolved()
+    t, stats = tree_lib.build_tree(bins, jnp.stack([g, h], 1), c,
+                                   max_depth=4, spec=spec,
+                                   return_stats=True)
+    assert int(stats.n_splits) == int((np.asarray(t.feature) >= 0).sum())
+    assert float(stats.gain_max) >= 0.0
+    assert float(stats.gain_sum) >= float(stats.gain_max)
+
+
+def test_summary_and_json_schema():
+    x, y = _toy(seed=6)
+    m = repro.fit(x, y, _cfg(telemetry=True), jax.random.PRNGKey(0))
+    s = m.report.summarize()
+    assert {"n_rounds", "train_loss", "grad_norm", "splits", "best_gain",
+            "collective_bytes"} <= set(s)
+    json.dumps(s)                              # everything serialisable
+
+    rec = json.loads(m.report.to_json())
+    assert rec["schema"] == "repro.obs.TrainReport/v1"
+    assert rec["n_rounds"] == m.config.n_trees
+    assert set(rec["rounds"]) == set(repro.TrainReport._fields)
+    for vals in rec["rounds"].values():
+        assert len(vals) == m.config.n_trees
+
+
+def test_to_json_writes_file(tmp_path):
+    x, y = _toy(seed=7)
+    m = repro.fit(x, y, _cfg(n_trees=3, telemetry=True),
+                  jax.random.PRNGKey(0))
+    path = tmp_path / "report.json"
+    m.report.to_json(str(path))
+    assert json.loads(path.read_text())["n_rounds"] == 3
+
+
+def test_collective_bytes_estimator():
+    cfg = _cfg(n_trees=4, telemetry=True)     # random strategy
+    ag, ps = obs.collective_bytes_per_round(cfg, n_features=16,
+                                            n_workers=8)
+    assert ag.shape == ps.shape == (4,)
+    # all_gather: W * f * k floats, every round (repropose default)
+    assert (ag == 8 * 16 * cfg.n_candidates * 4).all()
+    frontier = 2 ** (cfg.max_depth - 1)
+    hist = cfg.max_depth * frontier * 16 * cfg.nbins * 2 * 4
+    leaf = 2 ** cfg.max_depth * 2 * 4
+    assert (ps == hist + leaf + 3 * 4).all()
+
+    # fixed grid: proposal collectives happen in round 0 only
+    cfg_fix = _cfg(n_trees=4, repropose_each_round=False)
+    ag_f, _ = obs.collective_bytes_per_round(cfg_fix, 16, 8)
+    assert ag_f[0] > 0 and (ag_f[1:] == 0).all()
+
+    # uniform_range proposes via pmin/pmax (psum column), not all_gather
+    cfg_u = _cfg(strategy="uniform_range")
+    ag_u, ps_u = obs.collective_bytes_per_round(cfg_u, 16, 8)
+    assert (ag_u == 0).all() and (ps_u > hist + leaf - 1).all()
