@@ -28,8 +28,8 @@ def run(csv_rows: list) -> None:
     bins = jax.random.randint(key, (n, f), 0, nbins)
     node = jax.random.randint(key, (n,), 0, nn)
     gh = jax.random.normal(key, (n, 2))
-    t = _time(lambda: ops.hist(bins, node, gh, n_nodes=nn, nbins=nbins,
-                               backend="ref"))
+    spec = ops.HistSpec(n_nodes=nn, nbins=nbins, n_levels=1, backend="ref")
+    t = _time(lambda: ops.hist_levels(bins, node[None], gh, spec)[0])
     rows_per_s = n / (t / 1e6)
     csv_rows.append((f"hist/n={n}xf={f}", t, f"{rows_per_s/1e6:.1f}M rows/s"))
 
@@ -37,7 +37,9 @@ def run(csv_rows: list) -> None:
     b2 = bins[:2048]
     n2 = node[:2048]
     g2 = gh[:2048]
-    hp = ops.hist(b2, n2, g2, n_nodes=nn, nbins=nbins, backend="interpret")
+    ispec = ops.HistSpec(n_nodes=nn, nbins=nbins, n_levels=1,
+                         backend="interpret")
+    hp = ops.hist_levels(b2, n2[None], g2, ispec)[0]
     hr = ref.hist_ref(b2, n2, g2, n_nodes=nn, nbins=nbins)
     csv_rows.append(("hist/interpret_max_err", 0.0,
                      f"{float(jnp.abs(hp - hr).max()):.2e}"))

@@ -53,6 +53,12 @@ class GBDTConfig:
     repropose_each_round: bool = True   # paper re-proposes per iteration
     backend: str = "auto"               # kernel backend
     telemetry: bool = False             # per-round TrainReport (repro.obs)
+    subtract: bool = False              # histogram-subtraction growth:
+    #                                     scatter LEFT children only,
+    #                                     right = parent - left (halves
+    #                                     scatter updates + psum bytes;
+    #                                     trees pinned tree-for-tree vs
+    #                                     the subtract=False oracles)
 
     @property
     def nbins(self) -> int:
@@ -64,7 +70,8 @@ class GBDTConfig:
         return HistSpec(n_nodes=2 ** max(self.max_depth - 1, 0),
                         nbins=self.nbins,
                         n_levels=max(self.max_depth, 1),
-                        backend=self.backend)
+                        backend=self.backend,
+                        subtract=self.subtract)
 
 
 @dataclasses.dataclass

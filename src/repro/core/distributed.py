@@ -9,6 +9,11 @@ Mapping from the paper's Rabit/AllReduce world to JAX:
     workers compute the identical candidate set without a broadcast step.
   * histogram AllReduce -> lax.psum of the (node, feature, bin) panels
     inside the tree builder (the classic distributed-XGBoost pattern).
+    With ``cfg.subtract`` on, only the HALF-width left-child panels are
+    psum'd — each worker reconstructs the right children as
+    ``parent - left`` from its (replicated) previous-level panel, so the
+    per-level collective payload of tree growth halves (XGBoost's
+    histogram-subtraction trick applied to the communication schedule).
 
 The per-worker boosting loop is the same single-compile ``lax.scan``
 round step as :func:`boosting.fit`: the round body (grad/hess ->

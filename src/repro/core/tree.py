@@ -19,6 +19,7 @@ where threshold = candidates[feature, split_bin].
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Callable, NamedTuple
 
@@ -41,12 +42,21 @@ class TreeStats(NamedTuple):
     """Per-tree growth telemetry (all 0-d arrays, scan-stackable).
 
     Derived from the same (psum'd, in the distributed trainer) gain
-    panel the splits themselves come from, so it is replicated across
-    workers and adding it cannot change the grown tree.
+    panel the splits themselves come from — plus the local row panel for
+    the update count — so it is replicated across workers (the trainers
+    psum ``hist_updates`` to its cluster-wide value) and adding it
+    cannot change the grown tree.
     """
-    n_splits: jax.Array    # () int32 — realized (gain > 0) splits
-    gain_sum: jax.Array    # () float32 — sum of realized split gains
-    gain_max: jax.Array    # () float32 — largest realized gain (0 if none)
+    n_splits: jax.Array     # () int32 — realized (gain > 0) splits
+    gain_sum: jax.Array     # () float32 — sum of realized split gains
+    gain_max: jax.Array     # () float32 — largest realized gain (0 if none)
+    hist_updates: jax.Array  # () float32 — scatter updates issued for the
+    #                          tree's histograms: sum over levels of
+    #                          (rows actually scattered) * n_features.
+    #                          Direct growth scatters every row at every
+    #                          level; subtraction growth only the rows
+    #                          routed LEFT.  float32 (telemetry — exact
+    #                          below 2^24 updates per tree)
 
 
 class Forest(NamedTuple):
@@ -102,6 +112,24 @@ def build_tree(bins: jax.Array, gh: jax.Array, candidates: jax.Array, *,
     bit-exact vs the per-depth loop (same rows hit the same buckets in
     the same order).
 
+    With ``spec.subtract`` set the scan instead runs histogram-
+    subtraction growth (the classic trick of XGBoost/LightGBM, adapted
+    to the uniform frontier): each level scatters only the rows routed
+    LEFT, keyed by the parent id, into a HALF-width panel of
+    ``F/2`` parent buckets; the right-child histograms are reconstructed
+    as ``parent - left`` from the previous level's composed panel, which
+    rides the scan carry.  Level 0 falls out of the same program — every
+    row has child id 0 (even), so the "left" scatter is the full root
+    histogram.  Unpopulated odd nodes are re-zeroed from a static
+    populated-width mask (otherwise ``0 - left`` would leak the root's
+    negation down the all-right spine of the carry).  In the distributed
+    trainer only the half panel enters the per-level ``lax.psum`` —
+    the collective payload of tree growth halves.  Float subtraction
+    re-associates the right-child sums, so subtraction trees are only
+    *tree-for-tree* pinned against the ``subtract=False`` oracles on
+    fixed workloads rather than histogram-bit-exact (see README
+    "Architecture").
+
     Args:
       bins: (n, f) int32 bin ids in [0, nbins).
       gh: (n, 2) grad/hess panel for the current boosting round.
@@ -151,14 +179,15 @@ def build_tree(bins: jax.Array, gh: jax.Array, candidates: jax.Array, *,
     n_inner = 2 ** max_depth - 1
     n_leaves = 2 ** max_depth
 
-    def level_step(node, _):
-        # (n_nodes, f, nbins, 2); same shape every level — one program
-        hist = ops.hist_levels(bins, node[None], gh, lspec)[0]
-        if psum is not None:
-            hist = psum(hist)
+    def split_and_route(hist, node, upd):
+        """Shared tail of a level step: pick splits from the (already
+        psum'd / composed) frontier panel and route rows one level down.
+        ``upd`` is the level's scatter-update count (stats only)."""
         gains, sbins = ops.split_gain(hist, l2=l2, gamma=gamma,
                                       min_child_weight=min_child_weight,
                                       backend=lspec.backend)  # (nodes, f)
+        gains = gains[:frontier]
+        sbins = sbins[:frontier]
         best_f = jnp.argmax(gains, axis=1).astype(jnp.int32)  # (nodes,)
         best_gain = jnp.take_along_axis(gains, best_f[:, None], 1)[:, 0]
         best_s = jnp.take_along_axis(sbins, best_f[:, None], 1)[:, 0]
@@ -183,18 +212,62 @@ def build_tree(bins: jax.Array, gh: jax.Array, candidates: jax.Array, *,
             # and never split, so summing the full frontier is exact
             realized = jnp.where(do_split, best_gain, 0.0)
             ys += ((jnp.sum(do_split.astype(jnp.int32)),
-                    jnp.sum(realized), jnp.max(realized)),)
+                    jnp.sum(realized), jnp.max(realized), upd),)
         return node, ys
 
-    stats = TreeStats(jnp.int32(0), jnp.float32(0.0), jnp.float32(0.0))
+    def level_step(node, _):
+        # (n_nodes, f, nbins, 2); same shape every level — one program
+        hist = ops.hist_levels(bins, node[None], gh, lspec)[0]
+        if psum is not None:
+            hist = psum(hist)
+        # direct growth scatters every row at every level
+        return split_and_route(hist, node, jnp.float32(n * f))
+
+    half = max(frontier // 2, 1)
+    sspec = dataclasses.replace(lspec, n_nodes=half)  # parent-keyed panel
+
+    def level_step_subtract(carry, populated):
+        node, prev = carry
+        # half-width panel: LEFT-routed (even child id) rows only, keyed
+        # by parent id — in the distributed trainer this halved panel is
+        # all that crosses the mesh
+        left = ops.hist_levels(bins, node[None], gh, sspec)[0]
+        if psum is not None:
+            left = psum(left)
+        if frontier == 1:
+            hist = left                     # single-node level: root hist
+        else:
+            # interleave [left[p], prev[p] - left[p]] -> child 2p, 2p+1;
+            # re-zero unpopulated nodes so the carried panel stays the
+            # true level histogram (prev=0 minus a stale left would leak
+            # garbage down the all-right spine)
+            hist = jnp.stack([left, prev[:half] - left], axis=1)
+            hist = hist.reshape(frontier, f, nbins, 2)
+            hist = jnp.where(populated[:, None, None, None], hist, 0.0)
+        upd = jnp.sum((node % 2 == 0).astype(jnp.float32)) * f
+        node, ys = split_and_route(hist, node, upd)
+        return (node, hist), ys
+
+    stats = TreeStats(jnp.int32(0), jnp.float32(0.0), jnp.float32(0.0),
+                      jnp.float32(0.0))
     node = jnp.zeros((n,), jnp.int32)          # level-local node id
     if max_depth > 0:
-        node, ys = jax.lax.scan(level_step, node, None, length=max_depth)
+        if spec.subtract:
+            # populated[d, m] <=> node id m exists at depth d
+            populated = (jnp.arange(frontier)[None, :]
+                         < (2 ** jnp.arange(max_depth))[:, None])
+            prev0 = jnp.zeros((frontier, f, nbins, 2), jnp.float32)
+            (node, _), ys = jax.lax.scan(level_step_subtract,
+                                         (node, prev0), populated)
+        else:
+            node, ys = jax.lax.scan(level_step, node, None,
+                                    length=max_depth)
         if return_stats:
-            feats, sbins_l, threshs, (ns_l, gs_l, gm_l) = ys
+            feats, sbins_l, threshs, (ns_l, gs_l, gm_l, up_l) = ys
             stats = TreeStats(jnp.sum(ns_l).astype(jnp.int32),
                               jnp.sum(gs_l).astype(jnp.float32),
-                              jnp.max(gm_l).astype(jnp.float32))
+                              jnp.max(gm_l).astype(jnp.float32),
+                              jnp.sum(up_l).astype(jnp.float32))
         else:
             feats, sbins_l, threshs = ys
 

@@ -120,6 +120,33 @@ def hist_levels_pallas(bins: jax.Array, node_per_level: jax.Array,
 
 @functools.partial(jax.jit, static_argnames=(
     "n_nodes", "nbins", "row_tile", "node_chunk", "interpret"))
+def hist_levels_left_pallas(bins: jax.Array, node_per_level: jax.Array,
+                            gh: jax.Array, *, n_nodes: int, nbins: int,
+                            row_tile: int = DEFAULT_ROW_TILE,
+                            node_chunk: int = 0,
+                            interpret: bool = False) -> jax.Array:
+    """Subtraction child mode: left-routed rows only, parent-keyed panel.
+
+    ``node_per_level`` holds CHILD frontier ids in ``[0, 2 * n_nodes)``;
+    rows routed RIGHT (odd id) are masked to -1 and contribute a zero
+    one-hot row, so the launch accumulates only the left children into
+    ``n_nodes`` PARENT buckets.  The MXU contraction cost per tile is
+    unchanged (the one-hot is half as wide but still dense), but the
+    output panel — and therefore the HBM writes and any downstream
+    ``lax.psum`` — is half the full-frontier panel.
+
+    Returns:
+      (n_levels, n_nodes, f, nbins, 2) float32.
+    """
+    left = (node_per_level >= 0) & (node_per_level % 2 == 0)
+    parent = jnp.where(left, node_per_level // 2, -1)
+    return hist_levels_pallas(bins, parent, gh, n_nodes=n_nodes,
+                              nbins=nbins, row_tile=row_tile,
+                              node_chunk=node_chunk, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_nodes", "nbins", "row_tile", "node_chunk", "interpret"))
 def hist_pallas(bins: jax.Array, node: jax.Array, gh: jax.Array, *,
                 n_nodes: int, nbins: int,
                 row_tile: int = DEFAULT_ROW_TILE,

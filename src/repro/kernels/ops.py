@@ -16,11 +16,12 @@ passes it down instead of hand-threading ``n_nodes``/``nbins``/
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import jax
 
 from . import ref
-from .hist import hist_levels_pallas, hist_pallas
+from .hist import hist_levels_left_pallas, hist_levels_pallas, hist_pallas
 from .split_gain import split_gain_pallas
 from .flash_attention import flash_attention_pallas
 
@@ -69,12 +70,27 @@ class HistSpec:
         supported — it is the bit-exactness contract with ``hist_ref``
         — but it is part of the spec so a future bf16/f64 policy is an
         API no-op.
+      subtract: histogram-subtraction policy.  ``False`` (the oracle
+        path) scatters every row into the full frontier panel.  ``True``
+        switches :func:`hist_levels` to CHILD MODE: ``node_per_level``
+        carries child frontier ids in ``[0, 2 * n_nodes)``, only rows
+        routed LEFT (even id) are scattered, keyed by the parent id
+        ``child >> 1``, and the panel has ``n_nodes`` PARENT buckets —
+        the grower reconstructs each right child as ``parent - left``
+        from its cached previous-level panel.  Halves the logical
+        scatter-update count and the panel entering any distributed
+        ``lax.psum``; raw histogram values are no longer bit-exact vs
+        direct accumulation (float subtraction re-associates), so the
+        exactness contract moves up a level: trees must match the
+        ``subtract=False`` oracles tree-for-tree on pinned workloads
+        while raw histograms are tolerance-checked.
     """
     n_nodes: int
     nbins: int
     n_levels: int = 1
     backend: str = "auto"
     acc_dtype: str = "float32"
+    subtract: bool = False
 
     def __post_init__(self):
         if self.n_nodes < 1:
@@ -99,6 +115,13 @@ class HistSpec:
         """Same spec serving a different number of batched levels."""
         return dataclasses.replace(self, n_levels=n_levels)
 
+    def child_view(self) -> "HistSpec":
+        """The half-width parent-keyed panel a subtraction grower
+        scatters into: ``n_nodes`` halved (full frontier -> parent
+        count), subtract mode pinned on."""
+        return dataclasses.replace(self, n_nodes=max(self.n_nodes // 2, 1),
+                                   subtract=True)
+
 
 def hist_levels(bins, node_per_level, gh, spec: HistSpec):
     """Level-batched gradient/hessian histogram.
@@ -111,8 +134,12 @@ def hist_levels(bins, node_per_level, gh, spec: HistSpec):
 
     Args:
       bins: (n, f) int32 bin ids in [0, spec.nbins).
-      node_per_level: (spec.n_levels, n) int32 node ids in
-        [0, spec.n_nodes); negative = row masked out at that level.
+      node_per_level: (spec.n_levels, n) int32 node ids per level;
+        negative = row masked out at that level.  Direct mode
+        (``spec.subtract=False``): ids in [0, spec.n_nodes).  Child mode
+        (``spec.subtract=True``): CHILD frontier ids in
+        [0, 2 * spec.n_nodes) — only even (LEFT-routed) ids contribute,
+        keyed by the parent id ``child >> 1``.
       gh: (n, 2) float grad/hess panel.
       spec: static workload description (resolve 'auto' outside traced
         code via ``spec.resolved()`` when tracing matters).
@@ -120,7 +147,8 @@ def hist_levels(bins, node_per_level, gh, spec: HistSpec):
     Returns:
       (spec.n_levels, spec.n_nodes, f, nbins, 2) float32 — bit-exact vs
       a per-level :func:`repro.kernels.ref.hist_ref` loop on the 'ref'
-      and 'packed' backends.
+      and 'packed' backends (in child mode, vs
+      :func:`repro.kernels.ref.hist_levels_left_ref`).
     """
     if node_per_level.ndim != 2 or node_per_level.shape[0] != spec.n_levels:
         raise ValueError(
@@ -130,6 +158,19 @@ def hist_levels(bins, node_per_level, gh, spec: HistSpec):
     # named_scope: the hot-loop kernels show up as one annotated region
     # per op in profiler traces (jax.profiler / perfetto), keyed by
     # backend so packed-vs-pallas time is separable
+    if spec.subtract:
+        with jax.named_scope(f"repro.hist_levels_left[{backend}]"):
+            if backend == "packed":
+                return ref.hist_levels_left_packed(bins, node_per_level,
+                                                   gh, n_nodes=spec.n_nodes,
+                                                   nbins=spec.nbins)
+            if backend == "ref":
+                return ref.hist_levels_left_ref(bins, node_per_level, gh,
+                                                n_nodes=spec.n_nodes,
+                                                nbins=spec.nbins)
+            return hist_levels_left_pallas(
+                bins, node_per_level, gh, n_nodes=spec.n_nodes,
+                nbins=spec.nbins, interpret=(backend == "interpret"))
     with jax.named_scope(f"repro.hist_levels[{backend}]"):
         if backend == "packed":
             return ref.hist_levels_packed(bins, node_per_level, gh,
@@ -146,12 +187,16 @@ def hist_levels(bins, node_per_level, gh, spec: HistSpec):
 
 def hist(bins, node, gh, *, n_nodes: int, nbins: int,
          backend: str = "auto"):
-    """Gradient/hessian histogram: (n_nodes, f, nbins, 2).
+    """Deprecated: single-level histogram shim.
 
-    Deprecated-in-spirit single-level entry point, kept as a thin view
-    of :func:`hist_levels` (see README "Architecture" for the
-    timeline).  New call sites should build a :class:`HistSpec`.
+    Build a :class:`HistSpec` and call
+    ``hist_levels(bins, node[None], gh, spec)[0]`` instead (see README
+    "Architecture" for the timeline).
     """
+    warnings.warn(
+        "ops.hist is deprecated; build a HistSpec and call "
+        "hist_levels(bins, node[None], gh, spec)[0]",
+        DeprecationWarning, stacklevel=2)
     spec = HistSpec(n_nodes=n_nodes, nbins=nbins, n_levels=1,
                     backend=backend)
     return hist_levels(bins, node[None], gh, spec)[0]

@@ -81,6 +81,64 @@ def hist_levels_packed(bins: jax.Array, node_per_level: jax.Array,
 
 
 @functools.partial(jax.jit, static_argnames=("n_nodes", "nbins"))
+def hist_levels_left_ref(bins: jax.Array, node_per_level: jax.Array,
+                         gh: jax.Array, *, n_nodes: int,
+                         nbins: int) -> jax.Array:
+    """Oracle for the histogram-subtraction child mode.
+
+    ``node_per_level`` holds CHILD frontier ids in ``[0, 2 * n_nodes)``
+    (level-local heap ids: left child of parent ``p`` is ``2p``, right is
+    ``2p + 1``).  Only rows routed LEFT (even id) contribute, keyed by
+    the parent id ``child >> 1``; odd and negative ids drop out.  The
+    sibling histogram is NOT computed here — subtraction growers derive
+    it as ``parent - left`` from the cached previous-level panel.
+
+    Returns:
+      (n_levels, n_nodes, f, nbins, 2) float32 — ``n_nodes`` PARENT
+      buckets, i.e. half the child frontier.
+    """
+    left = (node_per_level >= 0) & (node_per_level % 2 == 0)
+    parent = jnp.where(left, node_per_level // 2, -1)
+    return hist_levels_ref(bins, parent, gh, n_nodes=n_nodes, nbins=nbins)
+
+
+@functools.partial(jax.jit, static_argnames=("n_nodes", "nbins"))
+def hist_levels_left_packed(bins: jax.Array, node_per_level: jax.Array,
+                            gh: jax.Array, *, n_nodes: int,
+                            nbins: int) -> jax.Array:
+    """Packed CPU scatter for the subtraction child mode (see
+    :func:`hist_levels_left_ref` for the indexing contract).
+
+    One complex64 scatter into the HALF-width parent-keyed panel: rows
+    routed RIGHT (odd child id) and masked rows (negative id) get an
+    out-of-range flat index, which XLA's default scatter mode DROPS —
+    they never reach the read-modify-write, so the logical update count
+    is ``n_left * f`` instead of ``n * f`` and the output working set is
+    half the full-frontier panel's.  Matches the oracle exactly: within
+    each parent bucket the surviving updates arrive in the same row
+    order as the per-level scatter.
+    """
+    L, n = node_per_level.shape
+    f = bins.shape[1]
+    left = (node_per_level >= 0) & (node_per_level % 2 == 0)   # (L, n)
+    parent = jnp.where(left, node_per_level // 2, 0)
+    fb = jnp.arange(f, dtype=jnp.int32)[None, :] * nbins + bins   # (n, f)
+    z = jax.lax.complex(gh[:, 0].astype(jnp.float32),
+                        gh[:, 1].astype(jnp.float32)).astype(jnp.complex64)
+    size = L * n_nodes * f * nbins
+    lvl_node = (jnp.arange(L, dtype=jnp.int32)[:, None] * n_nodes + parent)
+    flat = lvl_node[:, :, None] * (f * nbins) + fb[None]       # (L, n, f)
+    # dropped rows point one-past-the-end (NOT -1: negative indices wrap
+    # under NumPy semantics; >= size is unambiguously out of bounds)
+    flat = jnp.where(left[:, :, None], flat, size)
+    vals = jnp.broadcast_to(z[None, :, None], (L, n, f))
+    out = jnp.zeros((size,), jnp.complex64)
+    out = out.at[flat.ravel()].add(vals.ravel())
+    return jnp.stack([out.real, out.imag], -1).reshape(
+        L, n_nodes, f, nbins, 2).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("n_nodes", "nbins"))
 def hist_packed(bins: jax.Array, node: jax.Array, gh: jax.Array, *,
                 n_nodes: int, nbins: int) -> jax.Array:
     """CPU-fast histogram: grad/hess packed into one complex64 scatter.

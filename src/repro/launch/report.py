@@ -85,6 +85,12 @@ def telemetry_table(rec: dict) -> str:
            f"{tel['overhead_pct_vs_scanned_warm']:+.1f}% | "
            f"{s['train_loss']['first']:.4f}→{s['train_loss']['final']:.4f} | "
            f"{s['splits']['total']} | {s['best_gain']['max']:.2f} |"]
+    su = rec.get("scatter_updates")
+    if su:
+        out += ["", "| scatter updates direct | subtract | reduction |",
+                "|---|---|---|",
+                f"| {su['direct_total']:.0f} | {su['subtract_total']:.0f} | "
+                f"{su['reduction_ratio']:.2f}x |"]
     return "\n".join(out)
 
 

@@ -26,11 +26,19 @@ Fields (all shape ``(n_trees,)``, one entry per round):
                     round's candidate proposal (0 on a single host)
   psum_bytes        estimated psum payload per worker for the round's
                     histogram / leaf reductions (0 on a single host)
+  hist_updates      MEASURED histogram scatter updates issued for the
+                    round's tree (rows scattered x features, summed
+                    over levels; cluster-wide in the distributed
+                    trainer).  Direct growth pays n*f per level;
+                    subtraction growth only the LEFT-routed rows —
+                    this field is how the ~2x reduction is audited.
 
 The distributed byte fields are *estimates* computed host-side from
 static shapes (:func:`collective_bytes_per_round`) in the spirit of
 Huang & Yi's communication-cost accounting — they count the logical
-collective payload, not wire-level implementation detail.
+collective payload, not wire-level implementation detail.  With
+``GBDTConfig.subtract`` on, only the half-width left-child panels enter
+the per-level histogram psum, and the estimator accounts for it.
 """
 
 from __future__ import annotations
@@ -53,6 +61,7 @@ class TrainReport(NamedTuple):
     best_gain_mean: jax.Array
     all_gather_bytes: jax.Array
     psum_bytes: jax.Array
+    hist_updates: jax.Array
 
     @property
     def n_rounds(self) -> int:
@@ -75,6 +84,7 @@ class TrainReport(NamedTuple):
         gmax = np.asarray(self.best_gain_max, np.float64)
         ag = np.asarray(self.all_gather_bytes, np.float64)
         ps = np.asarray(self.psum_bytes, np.float64)
+        upd = np.asarray(self.hist_updates, np.float64)
         return {
             "n_rounds": self.n_rounds,
             "train_loss": {"first": float(loss[0]), "final": float(loss[-1]),
@@ -88,12 +98,14 @@ class TrainReport(NamedTuple):
             "collective_bytes": {"all_gather_total": float(ag.sum()),
                                  "psum_total": float(ps.sum()),
                                  "per_round": float((ag + ps).mean())},
+            "scatter_updates": {"total": float(upd.sum()),
+                                "per_round_mean": float(upd.mean())},
         }
 
     def to_json(self, path: str | None = None, *, indent: int = 1) -> str:
         """Serialise the full report (+ summary) to JSON; optionally write
         it to ``path``.  Schema is pinned by tests/test_telemetry.py."""
-        rec = {"schema": "repro.obs.TrainReport/v1",
+        rec = {"schema": "repro.obs.TrainReport/v2",
                "n_rounds": self.n_rounds,
                "rounds": self.to_dict(),
                "summary": self.summarize()}
@@ -146,8 +158,10 @@ def round_report(*, margin, y, g, h, objective: str, stats,
     """
     sq_g = jnp.sum(g * g)
     sq_h = jnp.sum(h * h)
+    upd = stats.hist_updates
     if psum is not None:
         sq_g, sq_h = psum(sq_g), psum(sq_h)
+        upd = psum(upd)               # cluster-wide scatter-update count
     loss = mean_train_loss(margin, y, objective, weight=weight,
                            n_global=n_global, psum=psum)
     mean_gain = stats.gain_sum / jnp.maximum(
@@ -162,6 +176,7 @@ def round_report(*, margin, y, g, h, objective: str, stats,
         best_gain_mean=mean_gain.astype(jnp.float32),
         all_gather_bytes=zero,
         psum_bytes=zero,
+        hist_updates=upd.astype(jnp.float32),
     )
 
 
@@ -177,10 +192,13 @@ def collective_bytes_per_round(cfg, n_features: int, n_workers: int,
         pool-resample ('random') and quantile-merge strategies; zero for
         'uniform_range' (its pmin/pmax ride the psum column).
       psum — the per-level histogram AllReduce
-        (``max_depth * frontier * f * nbins * 2`` floats), the leaf
-        grad/hess segment reduction (``2^max_depth * 2``), the
-        uniform_range pmin/pmax (``2 * f``) when applicable, and the
-        telemetry scalar reductions (3 floats) when telemetry is on.
+        (``max_depth * frontier * f * nbins * 2`` floats, with
+        ``frontier`` replaced by the half-width parent panel
+        ``max(frontier // 2, 1)`` under ``cfg.subtract`` — only the
+        left-child panels cross the mesh), the leaf grad/hess segment
+        reduction (``2^max_depth * 2``), the uniform_range pmin/pmax
+        (``2 * f``) when applicable, and the telemetry scalar
+        reductions (4 floats) when telemetry is on.
 
     With ``repropose_each_round=False`` the proposal collectives only
     happen in round 0; later rounds reuse the round-0 candidate grid.
@@ -202,9 +220,11 @@ def collective_bytes_per_round(cfg, n_features: int, n_workers: int,
     else:
         ag_prop, ps_prop = 0, 0
 
-    ps_tree = (cfg.max_depth * frontier * n_features * nbins * 2
+    hist_nodes = (max(frontier // 2, 1) if getattr(cfg, "subtract", False)
+                  else frontier)
+    ps_tree = (cfg.max_depth * hist_nodes * n_features * nbins * 2
                + 2 ** cfg.max_depth * 2) * dtype_bytes
-    ps_telemetry = 3 * dtype_bytes if getattr(cfg, "telemetry", False) else 0
+    ps_telemetry = 4 * dtype_bytes if getattr(cfg, "telemetry", False) else 0
 
     ag = np.zeros(cfg.n_trees, np.float32)
     ps = np.full(cfg.n_trees, ps_tree + ps_telemetry, np.float32)

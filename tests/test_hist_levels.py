@@ -70,9 +70,12 @@ def test_hist_levels_pallas_interpret(n, f, nbins, n_nodes, L):
 
 
 def test_hist_single_level_delegates():
-    """ops.hist is the L=1 view of hist_levels (old API kept working)."""
+    """ops.hist is the L=1 view of hist_levels (deprecated shim kept
+    working, but it must warn)."""
     bins, node, gh = _case(300, 4, 9, 6, 1, seed=2)
-    one = ops.hist(bins, node[0], gh, n_nodes=6, nbins=9, backend="packed")
+    with pytest.warns(DeprecationWarning, match="ops.hist is deprecated"):
+        one = ops.hist(bins, node[0], gh, n_nodes=6, nbins=9,
+                       backend="packed")
     spec = HistSpec(n_nodes=6, nbins=9, n_levels=1, backend="packed")
     batched = ops.hist_levels(bins, node, gh, spec)
     np.testing.assert_array_equal(np.asarray(one), np.asarray(batched[0]))
@@ -99,6 +102,104 @@ def test_masked_rows_drop_out():
     assert tot0 != tot1
 
 
+# ---------------------------------------------------------------------------
+# Child mode (subtraction growth): spec.subtract=True scatters only the
+# LEFT-routed rows, keyed by parent id, into a half-width panel.  The
+# grower reconstructs right children as parent - left; the invariant
+# that makes that sound is parent == left + right per (feature, bin).
+# ---------------------------------------------------------------------------
+
+def _child_case(n, f, nbins, n_parents, L, seed=0, p_left=0.5):
+    """Rows routed through L levels over n_parents parents: child id =
+    2*parent + route per level (route 0 = LEFT), -1 = masked out."""
+    rng = np.random.default_rng(seed)
+    bins = jnp.asarray(rng.integers(0, nbins, (n, f)), jnp.int32)
+    parent = rng.integers(-1, n_parents, (L, n))
+    route = (rng.random((L, n)) >= p_left).astype(np.int64)
+    child = np.where(parent >= 0, 2 * parent + route, -1)
+    gh = jnp.asarray(rng.normal(size=(n, 2)), jnp.float32)
+    return bins, jnp.asarray(child, jnp.int32), gh
+
+
+@pytest.mark.parametrize("backend", ["ref", "packed"])
+def test_child_mode_backends_bit_exact(backend):
+    bins, child, gh = _child_case(300, 4, 9, 5, 3, seed=11)
+    spec = HistSpec(n_nodes=5, nbins=9, n_levels=3, backend=backend,
+                    subtract=True)
+    out = ops.hist_levels(bins, child, gh, spec)
+    want = ref.hist_levels_left_ref(bins, child, gh, n_nodes=5, nbins=9)
+    assert out.shape == (3, 5, 4, 9, 2)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_child_mode_pallas_interpret():
+    bins, child, gh = _child_case(257, 3, 8, 4, 2, seed=12)
+    spec = HistSpec(n_nodes=4, nbins=8, n_levels=2, backend="interpret",
+                    subtract=True)
+    out = ops.hist_levels(bins, child, gh, spec)
+    want = ref.hist_levels_left_ref(bins, child, gh, n_nodes=4, nbins=8)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-6, atol=1e-5)
+
+
+@pytest.mark.parametrize("p_left", [0.5, 0.97, 1.0])
+def test_parent_equals_left_plus_right(p_left):
+    """The subtraction invariant, including passthrough-heavy routing
+    (p_left -> 1: nodes route everything LEFT, right children empty)."""
+    n, f, nbins, P, L = 800, 3, 9, 4, 3
+    bins, child, gh = _child_case(n, f, nbins, P, L, seed=7, p_left=p_left)
+    left = ops.hist_levels(bins, child, gh,
+                           HistSpec(n_nodes=P, nbins=nbins, n_levels=L,
+                                    backend="packed", subtract=True))
+    # direct child-frontier panel, split into (left, right) pairs
+    full = ops.hist_levels(bins, child, gh,
+                           HistSpec(n_nodes=2 * P, nbins=nbins, n_levels=L,
+                                    backend="packed"))
+    lr = full.reshape(L, P, 2, f, nbins, 2)
+    parent_ids = jnp.where(child >= 0, child // 2, -1)
+    parent = ops.hist_levels(bins, parent_ids, gh,
+                             HistSpec(n_nodes=P, nbins=nbins, n_levels=L,
+                                      backend="packed"))
+    # the left panel is the direct left-child histogram, bit-for-bit
+    np.testing.assert_array_equal(np.asarray(left), np.asarray(lr[:, :, 0]))
+    # parent == left + right (tolerance: addition order differs)
+    np.testing.assert_allclose(np.asarray(parent),
+                               np.asarray(lr[:, :, 0] + lr[:, :, 1]),
+                               rtol=1e-5, atol=1e-4)
+    # the grower's reconstruction: parent - left == direct right child
+    np.testing.assert_allclose(np.asarray(parent - left),
+                               np.asarray(lr[:, :, 1]),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_build_tree_subtract_matches_direct():
+    """Same tree out of subtraction growth and direct growth (the
+    exactness contract at the tree level; raw hists differ in low bits)."""
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rng.normal(size=(600, 4)), jnp.float32)
+    cand = jnp.sort(jnp.asarray(rng.normal(size=(4, 8)), jnp.float32), 1)
+    from repro.core import binning
+    bins = binning.bin_features(x, cand)
+    gh = jnp.asarray(rng.normal(size=(600, 2)), jnp.float32)
+    gh = gh.at[:, 1].set(jnp.abs(gh[:, 1]) + 0.1)
+    for depth in (1, 2, 4):
+        spec = HistSpec(n_nodes=2 ** max(depth - 1, 0), nbins=9,
+                        n_levels=depth, backend="packed")
+        direct = tree_lib.build_tree(bins, gh, cand, max_depth=depth,
+                                     spec=spec)
+        sub = tree_lib.build_tree(
+            bins, gh, cand, max_depth=depth,
+            spec=dataclasses.replace(spec, subtract=True))
+        np.testing.assert_array_equal(np.asarray(direct.feature),
+                                      np.asarray(sub.feature))
+        np.testing.assert_array_equal(np.asarray(direct.split_bin),
+                                      np.asarray(sub.split_bin))
+        np.testing.assert_allclose(np.asarray(direct.threshold),
+                                   np.asarray(sub.threshold), atol=1e-6)
+        np.testing.assert_allclose(np.asarray(direct.leaf_value),
+                                   np.asarray(sub.leaf_value), atol=1e-5)
+
+
 def test_histspec_validation_and_views():
     with pytest.raises(ValueError):
         HistSpec(n_nodes=0, nbins=4)
@@ -115,6 +216,9 @@ def test_histspec_validation_and_views():
     assert spec.with_levels(1).n_nodes == spec.n_nodes
     assert spec.resolved().backend in ("packed", "pallas")
     assert hash(spec) == hash(HistSpec(n_nodes=2, nbins=4, n_levels=3))
+    cv = HistSpec(n_nodes=8, nbins=4).child_view()
+    assert cv.n_nodes == 4 and cv.subtract is True
+    assert HistSpec(n_nodes=1, nbins=4).child_view().n_nodes == 1
 
 
 def test_hist_levels_shape_mismatch_raises():

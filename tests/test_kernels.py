@@ -6,6 +6,15 @@ import numpy as np
 import pytest
 
 from repro.kernels import ops, ref
+from repro.kernels.ops import HistSpec
+
+
+def _hist1(bins, node, gh, *, n_nodes, nbins, backend):
+    """Single-level histogram through the HistSpec API (the migration
+    target of the deprecated ops.hist shim)."""
+    spec = HistSpec(n_nodes=n_nodes, nbins=nbins, n_levels=1,
+                    backend=backend)
+    return ops.hist_levels(bins, node[None], gh, spec)[0]
 
 
 # ---------------------------------------------------------------------------
@@ -24,8 +33,8 @@ def test_hist_matches_ref(n, f, nbins, nn):
     node = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, nn)
     gh = jax.random.normal(jax.random.fold_in(key, 2), (n, 2))
     r = ref.hist_ref(bins, node, gh, n_nodes=nn, nbins=nbins)
-    p = ops.hist(bins, node, gh, n_nodes=nn, nbins=nbins,
-                 backend="interpret")
+    p = _hist1(bins, node, gh, n_nodes=nn, nbins=nbins,
+               backend="interpret")
     np.testing.assert_allclose(np.asarray(r), np.asarray(p),
                                rtol=1e-5, atol=1e-4)
 
@@ -34,7 +43,7 @@ def test_hist_masks_negative_nodes():
     bins = jnp.zeros((8, 2), jnp.int32)
     node = jnp.asarray([0, 0, -1, -1, 1, 1, -1, 0])
     gh = jnp.ones((8, 2))
-    out = ops.hist(bins, node, gh, n_nodes=2, nbins=4, backend="interpret")
+    out = _hist1(bins, node, gh, n_nodes=2, nbins=4, backend="interpret")
     assert float(out.sum()) == pytest.approx(20.0)  # 5 rows x 2 feats x 2 stats
     r = ref.hist_ref(bins, node, gh, n_nodes=2, nbins=4)
     np.testing.assert_allclose(np.asarray(out), np.asarray(r))
@@ -47,7 +56,7 @@ def test_hist_dtypes(dtype):
     node = jax.random.randint(key, (300,), 0, 3)
     gh = jax.random.normal(key, (300, 2)).astype(dtype)
     r = ref.hist_ref(bins, node, gh, n_nodes=3, nbins=9)
-    p = ops.hist(bins, node, gh, n_nodes=3, nbins=9, backend="interpret")
+    p = _hist1(bins, node, gh, n_nodes=3, nbins=9, backend="interpret")
     np.testing.assert_allclose(np.asarray(r), np.asarray(p), rtol=2e-2,
                                atol=2e-2)
 

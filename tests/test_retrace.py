@@ -59,6 +59,20 @@ def test_telemetry_round_step_traces_o1():
     assert _fit_traces(x, y, boosting.GBDTConfig(n_trees=4, **base)) == 0
 
 
+def test_subtract_round_step_traces_o1():
+    """Subtraction growth swaps the level scan's body (child-mode
+    scatter + panel carry) — still one round-step trace regardless of
+    n_trees, and a refit hits the jit cache."""
+    x, y = _toy(seed=5)
+    base = dict(max_depth=4, n_candidates=16, subtract=True,
+                telemetry=True)
+    t_small = _fit_traces(x, y, boosting.GBDTConfig(n_trees=4, **base))
+    t_double = _fit_traces(x, y, boosting.GBDTConfig(n_trees=8, **base))
+    assert t_small == 1, t_small
+    assert t_double == t_small
+    assert _fit_traces(x, y, boosting.GBDTConfig(n_trees=4, **base)) == 0
+
+
 def test_refit_same_config_hits_jit_cache():
     x, y = _toy(seed=1)
     cfg = boosting.GBDTConfig(n_trees=4, max_depth=4, n_candidates=16)

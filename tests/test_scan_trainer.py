@@ -73,6 +73,38 @@ def test_scanned_fit_with_telemetry_matches_reference(strategy):
     assert m_scan.report.n_rounds == cfg.n_trees
 
 
+@pytest.mark.parametrize("strategy", ["random", "weighted_quantile"])
+def test_subtract_fit_matches_reference(strategy):
+    """Histogram-subtraction growth (GBDTConfig.subtract) is a pure perf
+    policy: tree-for-tree identical forests vs the direct-growth scanned
+    trainer AND the unrolled fit_reference oracle on a pinned seed."""
+    x, y = _toy()
+    key = jax.random.PRNGKey(3)
+    cfg_sub = boosting.GBDTConfig(n_trees=6, max_depth=4, n_candidates=16,
+                                  strategy=strategy, subtract=True)
+    cfg_dir = boosting.GBDTConfig(n_trees=6, max_depth=4, n_candidates=16,
+                                  strategy=strategy)
+    m_sub = boosting.fit(x, y, cfg_sub, key)
+    m_dir = boosting.fit(x, y, cfg_dir, key)
+    m_ref = boosting.fit_reference(x, y, cfg_dir, key)
+    _assert_forests_match(m_sub.forest, m_dir.forest)
+    _assert_forests_match(m_sub.forest, m_ref.forest)
+    assert boosting.accuracy(m_sub, x, y) == \
+        pytest.approx(boosting.accuracy(m_ref, x, y), abs=1e-6)
+
+
+def test_subtract_depth_one_matches_reference():
+    """frontier == 1 edge: level 0 is all-LEFT by construction, the
+    subtraction panel IS the root histogram."""
+    x, y = _toy(1000, 4, seed=9)
+    key = jax.random.PRNGKey(2)
+    cfg_sub = boosting.GBDTConfig(n_trees=3, max_depth=1, n_candidates=8,
+                                  subtract=True)
+    cfg_dir = boosting.GBDTConfig(n_trees=3, max_depth=1, n_candidates=8)
+    _assert_forests_match(boosting.fit(x, y, cfg_sub, key).forest,
+                          boosting.fit_reference(x, y, cfg_dir, key).forest)
+
+
 def test_scanned_fit_matches_reference_no_repropose():
     x, y = _toy(seed=2)
     cfg = boosting.GBDTConfig(n_trees=5, max_depth=4, n_candidates=16,
@@ -140,6 +172,11 @@ for strat in ("random", "weighted_quantile"):
                               strategy=strat)
     ms = distributed.fit_distributed(X, y, cfg, mesh, key)
     mr = distributed.fit_distributed(X, y, cfg, mesh, key, reference=True)
+    # subtraction growth: half-width psum panels, same trees
+    cfg_sub = boosting.GBDTConfig(n_trees=4, max_depth=4, n_candidates=16,
+                                  strategy=strat, subtract=True,
+                                  telemetry=True)
+    msub = distributed.fit_distributed(X, y, cfg_sub, mesh, key)
     out[strat] = {
         "feature_equal": bool(np.array_equal(np.asarray(ms.forest.feature),
                                              np.asarray(mr.forest.feature))),
@@ -152,9 +189,33 @@ for strat in ("random", "weighted_quantile"):
         "leaf_close": bool(np.allclose(
             np.asarray(ms.forest.leaf_value),
             np.asarray(mr.forest.leaf_value), atol=1e-5)),
+        "sub_feature_equal": bool(np.array_equal(
+            np.asarray(msub.forest.feature),
+            np.asarray(mr.forest.feature))),
+        "sub_split_bin_equal": bool(np.array_equal(
+            np.asarray(msub.forest.split_bin),
+            np.asarray(mr.forest.split_bin))),
+        "sub_threshold_close": bool(np.allclose(
+            np.asarray(msub.forest.threshold),
+            np.asarray(mr.forest.threshold), atol=1e-6)),
+        "sub_leaf_close": bool(np.allclose(
+            np.asarray(msub.forest.leaf_value),
+            np.asarray(mr.forest.leaf_value), atol=1e-5)),
+        "sub_psum_bytes": float(np.asarray(
+            msub.report.psum_bytes).sum()),
+        "sub_hist_updates": float(np.asarray(
+            msub.report.hist_updates).sum()),
         "acc_scan": boosting.accuracy(ms, X, y),
         "acc_ref": boosting.accuracy(mr, X, y),
     }
+
+# telemetry'd direct fit for the psum / scatter-update comparison
+cfg_dtel = boosting.GBDTConfig(n_trees=4, max_depth=4, n_candidates=16,
+                               telemetry=True)
+mdir = distributed.fit_distributed(X, y, cfg_dtel, mesh, key)
+out["direct_psum_bytes"] = float(np.asarray(mdir.report.psum_bytes).sum())
+out["direct_hist_updates"] = float(
+    np.asarray(mdir.report.hist_updates).sum())
 print("RESULT" + json.dumps(out))
 """
 
@@ -181,3 +242,27 @@ def test_distributed_scan_matches_reference(dist_equiv, strategy):
     assert r["feature_equal"] and r["split_bin_equal"], r
     assert r["threshold_close"] and r["leaf_close"], r
     assert r["acc_scan"] == pytest.approx(r["acc_ref"], abs=1e-6), r
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("strategy", ["random", "weighted_quantile"])
+def test_distributed_subtract_matches_reference(dist_equiv, strategy):
+    """subtract=True on the mesh: only half-width left panels cross the
+    psum, yet the forest is tree-for-tree the unrolled oracle's."""
+    r = dist_equiv[strategy]
+    assert r["sub_feature_equal"] and r["sub_split_bin_equal"], r
+    assert r["sub_threshold_close"] and r["sub_leaf_close"], r
+
+
+@pytest.mark.slow
+def test_distributed_subtract_halves_collectives(dist_equiv):
+    """The point of the policy: psum bytes and measured scatter updates
+    drop vs direct growth (hist term exactly halved; leaf/telemetry
+    terms unchanged, so the total is strictly between 0.5x and 1x)."""
+    sub_ps = dist_equiv["random"]["sub_psum_bytes"]
+    dir_ps = dist_equiv["direct_psum_bytes"]
+    assert 0.5 * dir_ps < sub_ps < dir_ps, (sub_ps, dir_ps)
+    sub_up = dist_equiv["random"]["sub_hist_updates"]
+    dir_up = dist_equiv["direct_hist_updates"]
+    assert sub_up < 0.75 * dir_up, (sub_up, dir_up)
+    assert sub_up > 0

@@ -66,6 +66,30 @@ def test_report_shapes_and_consistency():
     assert (np.asarray(rep.all_gather_bytes) == 0).all()
     assert (np.asarray(rep.psum_bytes) == 0).all()
 
+    # direct growth scatters every row at every level: n * f * depth
+    n, f = 2000, 5
+    np.testing.assert_array_equal(np.asarray(rep.hist_updates),
+                                  np.full(cfg.n_trees,
+                                          n * f * cfg.max_depth, np.float32))
+
+
+def test_subtract_hist_updates_below_direct():
+    """The measured scatter-update counter audits the subtraction win:
+    strictly fewer updates than direct growth, same forest."""
+    x, y = _toy(seed=1)
+    key = jax.random.PRNGKey(0)
+    m_dir = repro.fit(x, y, _cfg(telemetry=True), key)
+    m_sub = repro.fit(x, y, _cfg(telemetry=True, subtract=True), key)
+    for a, b in zip(m_sub.forest, m_dir.forest):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    up_dir = np.asarray(m_dir.report.hist_updates)
+    up_sub = np.asarray(m_sub.report.hist_updates)
+    assert (up_sub > 0).all()
+    assert (up_sub < up_dir).all(), (up_sub, up_dir)
+    # level 0 is all-LEFT (full root scatter); levels > 0 scatter only
+    # LEFT-routed rows, so the total sits between 1/depth and 1x
+    assert (up_sub >= up_dir / m_dir.config.max_depth).all()
+
 
 def test_loss_curve_decreases_on_learnable_data():
     x, y = _toy(seed=2)
@@ -124,6 +148,7 @@ def test_build_tree_return_stats_matches_tree():
     assert int(stats.n_splits) == int((np.asarray(t.feature) >= 0).sum())
     assert float(stats.gain_max) >= 0.0
     assert float(stats.gain_sum) >= float(stats.gain_max)
+    assert float(stats.hist_updates) == 800 * 4 * 4   # n * f * depth
 
 
 def test_summary_and_json_schema():
@@ -131,11 +156,11 @@ def test_summary_and_json_schema():
     m = repro.fit(x, y, _cfg(telemetry=True), jax.random.PRNGKey(0))
     s = m.report.summarize()
     assert {"n_rounds", "train_loss", "grad_norm", "splits", "best_gain",
-            "collective_bytes"} <= set(s)
+            "collective_bytes", "scatter_updates"} <= set(s)
     json.dumps(s)                              # everything serialisable
 
     rec = json.loads(m.report.to_json())
-    assert rec["schema"] == "repro.obs.TrainReport/v1"
+    assert rec["schema"] == "repro.obs.TrainReport/v2"
     assert rec["n_rounds"] == m.config.n_trees
     assert set(rec["rounds"]) == set(repro.TrainReport._fields)
     for vals in rec["rounds"].values():
@@ -161,7 +186,13 @@ def test_collective_bytes_estimator():
     frontier = 2 ** (cfg.max_depth - 1)
     hist = cfg.max_depth * frontier * 16 * cfg.nbins * 2 * 4
     leaf = 2 ** cfg.max_depth * 2 * 4
-    assert (ps == hist + leaf + 3 * 4).all()
+    assert (ps == hist + leaf + 4 * 4).all()
+
+    # subtraction growth: only the half-width left panels are psum'd
+    cfg_sub = _cfg(n_trees=4, telemetry=True, subtract=True)
+    _, ps_sub = obs.collective_bytes_per_round(cfg_sub, n_features=16,
+                                               n_workers=8)
+    assert (ps_sub == hist // 2 + leaf + 4 * 4).all()
 
     # fixed grid: proposal collectives happen in round 0 only
     cfg_fix = _cfg(n_trees=4, repropose_each_round=False)
