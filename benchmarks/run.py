@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV.  Modules:
   bench_proposal_time  — Table 2 T columns (scaling with rows)
   bench_kernels        — Pallas kernel hot spots
   bench_roofline       — §Roofline terms from the dry-run artifacts
+  bench_predict        — batched inference engine vs per-tree scan
 """
 
 from __future__ import annotations
@@ -13,8 +14,9 @@ from __future__ import annotations
 import sys
 import traceback
 
-from . import (bench_gbdt_step, bench_kernels, bench_proposal_time,
-               bench_rank_error, bench_roofline, bench_table2)
+from . import (bench_gbdt_step, bench_kernels, bench_predict,
+               bench_proposal_time, bench_rank_error, bench_roofline,
+               bench_table2)
 
 MODULES = [
     ("rank_error", bench_rank_error),
@@ -23,6 +25,7 @@ MODULES = [
     ("kernels", bench_kernels),
     ("gbdt_step", bench_gbdt_step),
     ("roofline", bench_roofline),
+    ("predict", bench_predict),
 ]
 
 

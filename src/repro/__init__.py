@@ -9,25 +9,35 @@ downstream code should import from ``repro`` directly::
 
     model = repro.fit(x, y, repro.GBDTConfig(strategy="random"))
     labels = model.predict(x)                     # output="label"
+    repro.save_gbdt("model.npz", model)           # serving checkpoint
+    margins = repro.load_gbdt("model.npz").predict(x, output="margin")
 """
 
+from .checkpoint import load_gbdt, save_gbdt
 from .core.boosting import (GBDTConfig, GBDTModel, accuracy, fit,
                             fit_reference, mape)
 from .core.distributed import fit_distributed
+from .core.predict import forest_predict, traverse_trace_count
 from .core.tree import Forest, Tree
-from .kernels.ops import HistSpec
-from .obs import TrainReport
+from .kernels.ops import HistSpec, TraverseSpec
+from .obs import PredictReport, TrainReport
 
 __all__ = [
     "Forest",
     "GBDTConfig",
     "GBDTModel",
     "HistSpec",
+    "PredictReport",
     "TrainReport",
+    "TraverseSpec",
     "Tree",
     "accuracy",
     "fit",
     "fit_distributed",
     "fit_reference",
+    "forest_predict",
+    "load_gbdt",
     "mape",
+    "save_gbdt",
+    "traverse_trace_count",
 ]

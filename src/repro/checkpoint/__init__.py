@@ -1,5 +1,7 @@
 """Checkpoint substrate."""
 
+from .gbdt import save_gbdt, load_gbdt
 from .npz import save_checkpoint, restore_checkpoint, latest_step
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "save_gbdt", "load_gbdt"]

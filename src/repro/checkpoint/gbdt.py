@@ -1,0 +1,81 @@
+"""GBDT model checkpointing for serving.
+
+A trained :class:`repro.core.boosting.GBDTModel` round-trips through one
+.npz file: the stacked Forest arrays, the candidate grid (the bin edges
+the binned predict path traverses on), the base score, and the
+:class:`GBDTConfig` as a JSON string — everything ``predict`` needs, so
+a serving process (``repro.launch.serve_gbdt``) restores a model with
+no access to the training data or trainer.  Writes are atomic
+(tmp + rename, same discipline as :mod:`repro.checkpoint.npz`) and the
+round-trip is bit-exact: predictions from a reloaded model are
+identical to the original (pinned by tests/test_predict_engine.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import boosting, tree as tree_lib
+
+_SCHEMA = "repro.checkpoint.GBDTModel/v1"
+
+
+def save_gbdt(path: str, model: boosting.GBDTModel) -> str:
+    """Serialize a trained model to one .npz file (atomic write).
+
+    Only the serving surface is saved — forest, candidates, base score,
+    config.  Training telemetry (``report``) and wall-clock fields are
+    deliberately dropped; they describe the fit, not the model.
+    """
+    cfg = dataclasses.asdict(model.config)
+    payload = {
+        "schema": np.array(_SCHEMA),
+        "config_json": np.array(json.dumps(cfg)),
+        "base_score": np.float64(model.base_score),
+        "candidates": np.asarray(model.candidates),
+        "forest/feature": np.asarray(model.forest.feature),
+        "forest/threshold": np.asarray(model.forest.threshold),
+        "forest/split_bin": np.asarray(model.forest.split_bin),
+        "forest/leaf_value": np.asarray(model.forest.leaf_value),
+    }
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+    with os.fdopen(fd, "wb") as f:
+        np.savez(f, **payload)
+    os.replace(tmp, path)
+    return path
+
+
+def load_gbdt(path: str) -> boosting.GBDTModel:
+    """Restore a model saved by :func:`save_gbdt`.
+
+    Predictions from the restored model are bit-identical to the
+    original: every array reloads with its exact dtype and the config
+    round-trips through JSON (floats stored as Python floats survive
+    exactly — json preserves the shortest round-trip representation).
+    """
+    with np.load(path) as data:
+        schema = str(data["schema"])
+        if schema != _SCHEMA:
+            raise ValueError(
+                f"unexpected checkpoint schema {schema!r} (want {_SCHEMA!r})")
+        cfg = boosting.GBDTConfig(**json.loads(str(data["config_json"])))
+        forest = tree_lib.Forest(
+            feature=jnp.asarray(data["forest/feature"]),
+            threshold=jnp.asarray(data["forest/threshold"]),
+            split_bin=jnp.asarray(data["forest/split_bin"]),
+            leaf_value=jnp.asarray(data["forest/leaf_value"]),
+        )
+        return boosting.GBDTModel(
+            config=cfg,
+            forest=forest,
+            base_score=float(data["base_score"]),
+            candidates=jnp.asarray(data["candidates"]),
+        )

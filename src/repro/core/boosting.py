@@ -34,8 +34,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import binning, proposal, tree as tree_lib
-from ..kernels.ops import HistSpec
+from . import binning, predict as predict_lib, proposal, tree as tree_lib
+from ..kernels.ops import HistSpec, TraverseSpec
 from ..obs import TrainReport, round_report
 
 
@@ -97,19 +97,79 @@ class GBDTModel:
         """Per-tree views (back-compat with the list-of-trees API)."""
         return tree_lib.forest_trees(self.forest)
 
-    def predict(self, x: jax.Array, *, output: str = "label") -> jax.Array:
-        """Evaluate the ensemble.
+    @property
+    def bin_edges(self) -> jax.Array | None:
+        """The (f, k) training candidate grid when it is shared by every
+        tree (host-side strategies, or ``repropose_each_round=False``);
+        None when the trainer re-proposed a fresh grid per round — the
+        binned fast path needs one grid that reproduces every recorded
+        threshold, and per-tree grids have no such thing."""
+        if self.candidates.shape[0] == 1:
+            return self.candidates[0]
+        return None
+
+    def bin_features(self, x: jax.Array) -> jax.Array:
+        """Bin raw rows against the training grid for binned predict.
+
+        Returns (n, f) uint8 bin ids in [0, k] (int32 when nbins > 256);
+        NaN lands in the last bin.  Feed the result to
+        ``predict(..., binned=True)`` — binning once and serving many
+        batches skips the per-call float threshold gathers.
+        """
+        edges = self.bin_edges
+        if edges is None:
+            raise ValueError(
+                "binned predict needs a fixed candidate grid; this model "
+                "re-proposed candidates per round (strategy="
+                f"{self.config.strategy!r}, repropose_each_round=True). "
+                "Train with repropose_each_round=False or a host-side "
+                "strategy to serve binned.")
+        bins = binning.bin_features(jnp.asarray(x, jnp.float32), edges)
+        if self.config.nbins <= 256:
+            return bins.astype(jnp.uint8)
+        return bins
+
+    def predict(self, x: jax.Array, *, output: str = "label",
+                binned: bool = False, backend: str | None = None,
+                tree_chunk: int | None = None) -> jax.Array:
+        """Evaluate the ensemble (batched level-synchronous engine).
 
         Args:
           output: 'label' — hard 0/1 for logistic, the predicted value
             for mse (the default, and what metrics consume); 'margin' —
             the raw additive score; 'proba' — sigmoid of the margin
             (logistic only).
+          binned: traverse on integer bin ids instead of float
+            thresholds (exact vs raw on finite rows, NaN goes last-bin
+            instead of right).  ``x`` may be raw floats (binned here
+            against :attr:`bin_edges`) or already-binned ids from
+            :meth:`bin_features`.
+          backend: traversal backend override ('auto'/'pallas'/
+            'interpret'/'ref'/'packed'); default auto-selects.
+          tree_chunk: trees per traversal chunk (compile-time constant
+            of the engine's scan step).
+
+        All output modes route through ONE jitted ensemble-sum
+        executable per (shapes, spec) — picking 'proba' after 'label'
+        does not recompile or re-traverse differently.
         """
-        x = jnp.asarray(x, jnp.float32)
-        total = tree_lib.forest_predict_raw(
-            self.forest, x, max_depth=self.config.max_depth)
-        m = self.base_score + self.config.learning_rate * total
+        x = jnp.asarray(x)
+        if binned and not jnp.issubdtype(x.dtype, jnp.integer):
+            x = self.bin_features(x)
+        elif binned:
+            if self.bin_edges is None:
+                raise ValueError(
+                    "binned predict needs a fixed candidate grid "
+                    "(see GBDTModel.bin_features)")
+        else:
+            x = x.astype(jnp.float32)
+        spec = TraverseSpec(
+            tree_chunk=tree_chunk or predict_lib.DEFAULT_TREE_CHUNK,
+            binned=binned,
+            backend=backend or self.config.backend).resolved()
+        m = predict_lib.margin(
+            self.forest, x, self.base_score, self.config.learning_rate,
+            max_depth=self.config.max_depth, spec=spec)
         if output == "margin":
             return m
         if self.config.objective != "logistic":

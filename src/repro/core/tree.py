@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Callable, NamedTuple
 
 import jax
@@ -340,10 +341,13 @@ def predict_raw(tree: Tree, x: jax.Array, *, max_depth: int) -> jax.Array:
 
 
 @functools.partial(jax.jit, static_argnames=("max_depth",))
-def forest_predict_raw(forest: Forest, x: jax.Array, *,
-                       max_depth: int) -> jax.Array:
-    """Sum of per-tree leaf values over a whole forest: one compile for
-    any n_trees, O(n) working memory (scan carries only the accumulator).
+def _forest_predict_scan(forest: Forest, x: jax.Array, *,
+                         max_depth: int) -> jax.Array:
+    """Sequential per-tree scan ensemble sum — the ORIGINAL predictor,
+    kept as the semantic oracle and bench baseline for the batched
+    level-synchronous engine (:func:`repro.core.predict.forest_predict`,
+    bit-identical output).  One compile for any n_trees, O(n) working
+    memory, but n_trees dependent dispatch chains — not the fast path.
 
     Returns the *unscaled* ensemble sum; the caller applies learning
     rate and base score.
@@ -354,6 +358,18 @@ def forest_predict_raw(forest: Forest, x: jax.Array, *,
     acc0 = jnp.zeros((x.shape[0],), jnp.float32)
     acc, _ = jax.lax.scan(body, acc0, forest)
     return acc
+
+
+def forest_predict_raw(forest: Forest, x: jax.Array, *,
+                       max_depth: int) -> jax.Array:
+    """Deprecated: use :func:`repro.core.predict.forest_predict`, the
+    batched level-synchronous engine (bit-identical, much faster)."""
+    warnings.warn(
+        "forest_predict_raw (per-tree scan) is deprecated; use "
+        "repro.core.predict.forest_predict (batched level-synchronous "
+        "traversal, bit-identical output)",
+        DeprecationWarning, stacklevel=2)
+    return _forest_predict_scan(forest, x, max_depth=max_depth)
 
 
 @functools.partial(jax.jit, static_argnames=("max_depth",))

@@ -23,6 +23,7 @@ import jax
 from . import ref
 from .hist import hist_levels_left_pallas, hist_levels_pallas, hist_pallas
 from .split_gain import split_gain_pallas
+from .traverse import traverse_chunk_pallas
 from .flash_attention import flash_attention_pallas
 
 
@@ -183,6 +184,88 @@ def hist_levels(bins, node_per_level, gh, spec: HistSpec):
         return hist_levels_pallas(bins, node_per_level, gh,
                                   n_nodes=spec.n_nodes, nbins=spec.nbins,
                                   interpret=(backend == "interpret"))
+
+
+@dataclasses.dataclass(frozen=True)
+class TraverseSpec:
+    """Static description of a batched forest-traversal workload.
+
+    The inference-side sibling of :class:`HistSpec`: frozen + hashable,
+    so one spec rides through ``jax.jit`` static args instead of loose
+    chunk/backend kwargs.  ``repro.core.predict`` builds one per predict
+    call and the backends underneath are swapped by this single switch.
+
+    Attributes:
+      tree_chunk: trees advanced together per level-synchronous chunk.
+        Working memory of the engine is O(rows * tree_chunk); the chunk
+        scan keeps the compile count O(1) in ``n_trees`` (forests are
+        padded with passthrough zero-leaf trees up to a chunk multiple).
+        Default 25 won the 500x6 CPU sweep in
+        ``benchmarks/bench_predict.py``.
+      binned: traverse on int bin ids (``bin <= split_bin``) instead of
+        raw float thresholds (``x <= threshold``).  Exact vs the raw
+        path on finite rows when the bin ids come from the training
+        candidate grid — thresholds ARE bin boundaries; NaN rows bin to
+        the LAST bin (so they follow the binned routing) while raw NaN
+        compares False and routes RIGHT.
+      backend: 'auto' | 'pallas' | 'interpret' | 'ref' | 'packed'; same
+        resolution rule as histograms ('auto' -> pallas on TPU, packed
+        elsewhere).
+    """
+    tree_chunk: int = 25
+    binned: bool = False
+    backend: str = "auto"
+
+    def __post_init__(self):
+        if self.tree_chunk < 1:
+            raise ValueError(
+                f"tree_chunk must be >= 1, got {self.tree_chunk}")
+        if self.backend not in _BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r}")
+
+    def resolved(self) -> "TraverseSpec":
+        """Spec with 'auto' pinned to a concrete backend (call once per
+        predict, outside traced code)."""
+        return dataclasses.replace(self, backend=resolve(self.backend))
+
+
+def traverse_chunk(values, feature, cmp, leaf, spec: TraverseSpec, *,
+                   max_depth: int):
+    """Level-synchronous descent of one chunk of stacked trees.
+
+    All ``C = feature.shape[0]`` trees advance one depth level per step:
+    a single fused gather (or masked-select on the Pallas path) fetches
+    every (row, tree) node record, one comparison routes the whole
+    (rows, trees) matrix a level down.
+
+    Args:
+      values: (n, f) raw float32 features, or int32 bin ids when
+        ``spec.binned``.
+      feature: (C, 2^max_depth - 1) int32 split features; -1 =
+        passthrough.
+      cmp: (C, 2^max_depth - 1) float32 thresholds (raw) or int32 split
+        bins (binned).
+      leaf: (C, 2^max_depth) float32 leaf values.
+      spec: static workload description (resolve 'auto' outside traced
+        code via ``spec.resolved()`` when tracing matters).
+
+    Returns:
+      (n, C) float32 PER-TREE leaf values — summation is left to the
+      caller so the engine can accumulate in tree order, keeping the
+      ensemble sum bit-identical to the sequential per-tree scan.  All
+      backends agree bitwise (`ref` is the vmapped per-tree oracle).
+    """
+    backend = resolve(spec.backend)
+    with jax.named_scope(f"repro.traverse[{backend}]"):
+        if backend == "packed":
+            return ref.traverse_chunk_packed(values, feature, cmp, leaf,
+                                             max_depth=max_depth)
+        if backend == "ref":
+            return ref.traverse_chunk_ref(values, feature, cmp, leaf,
+                                          max_depth=max_depth)
+        return traverse_chunk_pallas(values, feature, cmp, leaf,
+                                     max_depth=max_depth,
+                                     interpret=(backend == "interpret"))
 
 
 def hist(bins, node, gh, *, n_nodes: int, nbins: int,

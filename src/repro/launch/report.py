@@ -1,10 +1,12 @@
 """Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from the
-dry-run artifacts, and the §Telemetry table from the fit50 record in
+dry-run artifacts, the §Telemetry table from the fit50 record in
 BENCH_gbdt_step.json (the TrainReport summary written by
-``benchmarks/bench_gbdt_step.py --update``).
+``benchmarks/bench_gbdt_step.py --update``), and the §Predict table
+from BENCH_predict.json (the PredictReport summaries written by
+``benchmarks/bench_predict.py --update``).
 
 Usage: python -m repro.launch.report [--dir experiments/dryrun]
-                                     [--section dryrun|roofline|telemetry|all]
+                  [--section dryrun|roofline|telemetry|predict|all]
 Prints markdown to stdout (the EXPERIMENTS.md sections are refreshed by
 piping this output).
 """
@@ -94,17 +96,44 @@ def telemetry_table(rec: dict) -> str:
     return "\n".join(out)
 
 
+def predict_table(rec: dict) -> str:
+    """Markdown view of BENCH_predict.json (repro.obs.PredictReport
+    summaries per engine variant + the per-tree-scan baseline)."""
+    variants = rec.get("variants")
+    if not variants:
+        return "(no variants block — rerun bench_predict.py --update)"
+    wl = rec.get("workload", {})
+    out = [f"workload: {wl.get('n_trees')} trees x depth "
+           f"{wl.get('max_depth')}, {wl.get('rows')} rows x "
+           f"{wl.get('n_features')} features (chunk "
+           f"{wl.get('tree_chunk')})", "",
+           "| engine | rows/s | p50 ms | p99 ms | speedup vs scan |",
+           "|---|---|---|---|---|"]
+    for name, v in variants.items():
+        s = v["summary"]
+        speed = s.get("speedup_vs_scan")
+        out.append(
+            f"| {name} | {s['rows_per_s']:,.0f} | "
+            f"{s['latency_ms']['p50']:.2f} | {s['latency_ms']['p99']:.2f} | "
+            f"{'-' if speed is None else f'{speed:.1f}x'} |")
+    return "\n".join(out)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="experiments/dryrun")
     ap.add_argument("--section",
-                    choices=["dryrun", "roofline", "telemetry", "both",
-                             "all"],
+                    choices=["dryrun", "roofline", "telemetry", "predict",
+                             "both", "all"],
                     default="both")
     ap.add_argument("--bench-json",
                     default=os.path.join(os.path.dirname(__file__), "..",
                                          "..", "..", "BENCH_gbdt_step.json"),
                     help="fit50 record for the telemetry section")
+    ap.add_argument("--predict-json",
+                    default=os.path.join(os.path.dirname(__file__), "..",
+                                         "..", "..", "BENCH_predict.json"),
+                    help="inference record for the predict section")
     args = ap.parse_args()
     recs = load(args.dir)
     if args.section in ("dryrun", "both", "all"):
@@ -119,6 +148,10 @@ def main() -> None:
         print("## §Telemetry (fit50 TrainReport)\n")
         with open(args.bench_json) as fh:
             print(telemetry_table(json.load(fh)))
+    if args.section in ("predict", "all"):
+        print("## §Predict (batched inference engine)\n")
+        with open(args.predict_json) as fh:
+            print(predict_table(json.load(fh)))
 
 
 if __name__ == "__main__":

@@ -5,10 +5,12 @@ scanned trainers emit when ``GBDTConfig.telemetry`` is on; see
 :mod:`repro.obs.report` for the field reference and the JSON schema.
 """
 
+from .predict import PredictReport
 from .report import (TrainReport, collective_bytes_per_round,
                      mean_train_loss, round_report)
 
 __all__ = [
+    "PredictReport",
     "TrainReport",
     "collective_bytes_per_round",
     "mean_train_loss",

@@ -1,0 +1,181 @@
+"""Batched forest inference engine (repro.core.predict) contracts.
+
+The engine's one promise is *bit-identity* with the per-tree descent it
+replaces, across every backend and chunk size — a fast predictor that
+drifts by a ulp is a different model in production.  These tests pin:
+
+  * batched raw traversal == per-tree ``_descend_raw`` oracle sum for
+    backends ref / packed / interpret (Pallas kernel, interpret mode)
+    and chunk sizes 1 / 7 / n_trees, including NaN rows and chunk
+    padding (chunk sizes that do not divide n_trees);
+  * binned traversal == raw traversal on finite rows binned against the
+    training grid (thresholds ARE grid boundaries, so routing agrees);
+  * the NaN contract: raw NaN compares False and routes RIGHT at every
+    node; binned NaN lands in the LAST bin and follows bin routing;
+  * the jitted+donated margin path is bit-identical to the historical
+    eager ``base + lr * sum`` (the FMA-contraction pitfall);
+  * empty (0, f) batches return (0,) without tracing;
+  * ``tree.forest_predict_raw`` still works but warns DeprecationWarning;
+  * checkpoint save/load round-trips to bit-identical predictions.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import load_gbdt, save_gbdt
+from repro.core import boosting, predict as predict_lib, tree as tree_lib
+from repro.kernels.ops import TraverseSpec
+from repro.launch.serve_gbdt import synthetic_gbdt
+
+
+N_TREES, DEPTH, F, K = 13, 4, 6, 8
+
+
+@pytest.fixture(scope="module")
+def model():
+    return synthetic_gbdt(n_trees=N_TREES, max_depth=DEPTH, n_features=F,
+                          n_candidates=K, seed=7, passthrough_frac=0.25)
+
+
+@pytest.fixture(scope="module")
+def x_nan():
+    """Raw rows, a few of them containing NaNs."""
+    rng = np.random.default_rng(42)
+    x = rng.normal(size=(97, F)).astype(np.float32)
+    x[::11, 0] = np.nan
+    x[5, :] = np.nan
+    return jnp.asarray(x)
+
+
+def _oracle_sum(forest, x, max_depth):
+    """Ensemble sum via the unbatched per-tree descent."""
+    acc = jnp.zeros((x.shape[0],), jnp.float32)
+    for t in tree_lib.forest_trees(forest):
+        acc = acc + tree_lib._descend_raw(t, x, max_depth)
+    return np.asarray(acc)
+
+
+@pytest.mark.parametrize("backend", ["ref", "packed", "interpret"])
+@pytest.mark.parametrize("chunk", [1, 7, N_TREES])
+def test_batched_matches_per_tree_oracle(model, x_nan, backend, chunk):
+    # chunk=7 does not divide 13 trees: exercises passthrough padding
+    base = _oracle_sum(model.forest, x_nan, DEPTH)
+    out = predict_lib.forest_predict(model.forest, x_nan, max_depth=DEPTH,
+                                     tree_chunk=chunk, backend=backend)
+    assert np.array_equal(np.asarray(out), base), (backend, chunk)
+
+
+@pytest.mark.parametrize("backend", ["ref", "packed", "interpret"])
+def test_binned_matches_raw_on_finite_rows(model, backend):
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(64, F)).astype(np.float32))
+    bins = model.bin_features(x)
+    raw = predict_lib.forest_predict(model.forest, x, max_depth=DEPTH,
+                                     tree_chunk=5, backend=backend)
+    binned = predict_lib.forest_predict(model.forest, bins, max_depth=DEPTH,
+                                        binned=True, tree_chunk=5,
+                                        backend=backend)
+    assert np.array_equal(np.asarray(raw), np.asarray(binned)), backend
+
+
+def test_nan_contract_raw_routes_right(model):
+    """A NaN feature value fails every ``x <= thr`` comparison, so an
+    all-NaN row must land in the rightmost reachable leaf of each tree
+    — identically in the engine and the per-tree oracle."""
+    x = jnp.full((3, F), np.nan, jnp.float32)
+    base = _oracle_sum(model.forest, x, DEPTH)
+    out = predict_lib.forest_predict(model.forest, x, max_depth=DEPTH,
+                                     tree_chunk=4)
+    assert np.array_equal(np.asarray(out), base)
+    # and the oracle itself is the all-right spine: descend by hand
+    for t in tree_lib.forest_trees(model.forest):
+        node = 0
+        for _ in range(DEPTH):
+            node = node * 2 + 1                 # NaN -> go_left False
+        expect = float(t.leaf_value[node])
+        got = float(tree_lib._descend_raw(t, x, DEPTH)[0])
+        assert got == expect
+
+
+def test_nan_contract_binned_is_last_bin(model):
+    """bin_features sends NaN to the last bin (#{c_i < NaN} semantics),
+    so a binned NaN row follows the last bin's routing — in particular
+    it goes LEFT at passthrough nodes (split_bin = nbins-1), unlike the
+    raw path.  Pin the bin id and that the engine follows it."""
+    x = jnp.full((2, F), np.nan, jnp.float32)
+    bins = model.bin_features(x)
+    assert int(jnp.max(bins)) == int(jnp.min(bins)) == K  # last bin id
+    out = predict_lib.forest_predict(model.forest, bins, max_depth=DEPTH,
+                                     binned=True, tree_chunk=4)
+    acc = jnp.zeros((2,), jnp.float32)
+    for t in tree_lib.forest_trees(model.forest):
+        acc = acc + tree_lib._descend_binned(t, bins, DEPTH)
+    assert np.array_equal(np.asarray(out), np.asarray(acc))
+
+
+def test_margin_path_bit_identical_to_eager(model):
+    """GBDTModel.predict routes every output mode through ONE jitted
+    traversal; the closing affine transform must reproduce the eager
+    ``base + lr * sum`` bit-for-bit (no FMA contraction drift)."""
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.normal(size=(200, F)).astype(np.float32))
+    total = predict_lib.forest_predict(model.forest, x, max_depth=DEPTH)
+    eager = model.base_score + model.config.learning_rate * total
+    spec = TraverseSpec(binned=False).resolved()
+    m = predict_lib.margin(model.forest, x, model.base_score,
+                           model.config.learning_rate,
+                           max_depth=DEPTH, spec=spec)
+    assert np.array_equal(np.asarray(m), np.asarray(eager))
+    assert np.array_equal(np.asarray(model.predict(x, output="margin")),
+                          np.asarray(eager))
+
+
+def test_empty_batch_returns_empty(model):
+    x0 = jnp.zeros((0, F), jnp.float32)
+    out = predict_lib.forest_predict(model.forest, x0, max_depth=DEPTH)
+    assert out.shape == (0,)
+    m = model.predict(x0, output="margin")
+    assert m.shape == (0,)
+
+
+def test_forest_predict_raw_shim_warns(model):
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(16, F)).astype(np.float32))
+    with pytest.warns(DeprecationWarning, match="forest_predict_raw"):
+        old = tree_lib.forest_predict_raw(model.forest, x, max_depth=DEPTH)
+    new = predict_lib.forest_predict(model.forest, x, max_depth=DEPTH)
+    assert np.array_equal(np.asarray(old), np.asarray(new))
+
+
+def test_checkpoint_roundtrip_bit_identical(model, tmp_path):
+    path = tmp_path / "model.npz"
+    save_gbdt(path, model)
+    loaded = load_gbdt(path)
+    assert loaded.config == model.config
+    assert loaded.base_score == model.base_score
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(50, F)).astype(np.float32))
+    for output in ("margin",):
+        assert np.array_equal(np.asarray(model.predict(x, output=output)),
+                              np.asarray(loaded.predict(x, output=output)))
+    # binned serving path survives the round trip too (grid persisted)
+    bins = loaded.bin_features(x)
+    assert np.array_equal(
+        np.asarray(model.predict(x, output="margin")),
+        np.asarray(loaded.predict(bins, output="margin", binned=True)))
+
+
+def test_model_predict_binned_accepts_raw_and_prebinned(model):
+    """predict(..., binned=True) bins float input itself; pre-binned
+    integer input is used as-is — both match the raw path exactly."""
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.normal(size=(40, F)).astype(np.float32))
+    raw = np.asarray(model.predict(x, output="margin"))
+    auto = np.asarray(model.predict(x, output="margin", binned=True))
+    pre = np.asarray(model.predict(model.bin_features(x), output="margin",
+                                   binned=True))
+    assert np.array_equal(raw, auto)
+    assert np.array_equal(raw, pre)

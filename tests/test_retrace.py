@@ -1,4 +1,5 @@
-"""Retrace behavior of the scanned boosting trainer.
+"""Retrace behavior of the scanned boosting trainer and the batched
+inference engine.
 
 The whole point of the lax.scan round runner is that trace/compile cost
 is O(1) in n_trees: the round step's Python body executes once per
@@ -13,9 +14,11 @@ same invariant is cross-checked against XLA compile events.
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
-from repro.core import boosting
+from repro.core import boosting, predict as predict_lib
+from repro.launch.serve_gbdt import synthetic_gbdt
 
 
 def _toy(n=1000, f=4, seed=0):
@@ -82,6 +85,33 @@ def test_refit_same_config_hits_jit_cache():
     before = boosting.round_trace_count()
     boosting.fit(x, y, cfg, jax.random.PRNGKey(99))
     assert boosting.round_trace_count() - before == 0
+
+
+def test_traversal_traces_o1_in_n_trees():
+    """Inference mirrors the trainer's contract: the batched traversal's
+    chunk step traces at most once per fresh compiled predict no matter
+    how many trees the forest holds (the chunk axis is a lax.scan), and
+    a repeat call with unchanged (shapes, spec) adds zero traces."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(300, 5)).astype(np.float32))
+
+    def fresh_traces(n_trees):
+        model = synthetic_gbdt(n_trees=n_trees, max_depth=3, n_features=5,
+                               n_candidates=8, seed=n_trees)
+        before = predict_lib.traverse_trace_count()
+        predict_lib.forest_predict(model.forest, x, max_depth=3,
+                                   tree_chunk=4)
+        fresh = predict_lib.traverse_trace_count() - before
+        before = predict_lib.traverse_trace_count()
+        predict_lib.forest_predict(model.forest, x, max_depth=3,
+                                   tree_chunk=4)
+        repeat = predict_lib.traverse_trace_count() - before
+        return fresh, repeat
+
+    f8, r8 = fresh_traces(8)
+    f32, r32 = fresh_traces(32)
+    assert f8 <= 1 and f32 <= 1, (f8, f32)   # O(1) in n_trees
+    assert r8 == 0 and r32 == 0, (r8, r32)   # jit cache hit on repeat
 
 
 def test_compile_events_constant_in_n_trees():
